@@ -1,0 +1,59 @@
+"""Model selection at paper scale: the Table-1 workload (2 workloads x
+12-job HPO grids) under all five policies on 1- and 2-node clusters.
+
+    PYTHONPATH=src python examples/model_selection.py [--nodes 1]
+
+This is the runnable version of benchmarks.run:table2 with a Gantt dump
+so the "unintuitive allocations" the paper describes are visible.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.baselines import (CurrentPractice, Optimus, OptimusDynamic,
+                                  RandomPolicy, SaturnPolicy)
+from repro.core.executor import simulate
+from repro.core.job import ClusterSpec
+from repro.core.library import ParallelismLibrary
+from repro.core.profiler import HARDWARE, TrialRunner
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=1)
+    ap.add_argument("--workload", default="wikitext",
+                    choices=["wikitext", "imagenet"])
+    args = ap.parse_args()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.run import paper_workloads
+    jobs = paper_workloads()[args.workload]
+    cluster = ClusterSpec(nodes=args.nodes, gpus_per_node=8)
+    lib = ParallelismLibrary()
+    runner = TrialRunner(lib, HARDWARE["a100"])
+    counts = [1, 2, 4, 8] + ([16] if args.nodes == 2 else [])
+    profiles = runner.profile_all(jobs, counts, mode="analytic")
+
+    print(f"{args.workload}: {len(jobs)} jobs, {cluster.total_gpus} GPUs")
+    results = {}
+    for pol in (CurrentPractice(), RandomPolicy(0), Optimus(),
+                OptimusDynamic(), SaturnPolicy(time_limit_s=15)):
+        res = simulate(jobs, pol, profiles, cluster,
+                       introspect_every_s=600 if pol.dynamic else None)
+        results[pol.name] = res
+        print(f"  {pol.name:18s} {res.makespan_s / 3600:6.2f} h   "
+              f"util={res.utilization(cluster):.2f}")
+
+    sat = results["saturn"]
+    print("\nSaturn Gantt (first 12 segments) — note the mixed"
+          " parallelisms/allocations:")
+    for g in sorted(sat.gantt, key=lambda g: g.start_s)[:12]:
+        if g.kind == "run":
+            print(f"  t={g.start_s / 3600:6.2f}h..{g.end_s / 3600:6.2f}h  "
+                  f"{g.job:26s} {g.technique:>6s} x{g.n_gpus}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Batched serving demo: prefill a batch of prompts, then decode tokens
+step-by-step against the KV/recurrent-state cache (the serve_step the
+decode dry-run shapes lower).
+
+    PYTHONPATH=src python examples/serve_batch.py --arch gemma3-4b
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import concrete_batch, get_config
+from repro.models.transformer import (init_decode_state, init_model,
+                                      prefill_forward)
+from repro.train.steps import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    prompts = concrete_batch(cfg, args.batch, args.prompt_len)["tokens"]
+    max_len = args.prompt_len + args.gen
+
+    # prefill gives last-token logits + a decode-ready state; here we
+    # re-run decode over a max_len cache so generation can append
+    t0 = time.time()
+    state = init_decode_state(cfg, args.batch, max_len, dtype=jnp.float32)
+    serve = jax.jit(make_serve_step(cfg))
+    for i in range(args.prompt_len):          # teacher-forced warm-up
+        tok = prompts[:, i:i + 1]
+        nxt, logits, state = serve(params, tok, state)
+    t_prefill = time.time() - t0
+
+    toks = [nxt]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        nxt, logits, state = serve(params, nxt, state)
+        toks.append(nxt)
+    jax.block_until_ready(nxt)
+    t_decode = time.time() - t0
+    out = jnp.concatenate(toks, axis=1)
+    print(f"arch={cfg.name} batch={args.batch}")
+    print(f"prompt warm-up: {t_prefill:.2f}s; decode: "
+          f"{args.gen - 1} steps in {t_decode:.2f}s "
+          f"({(args.gen - 1) * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
+    print("generated ids (row 0):", out[0][:16].tolist(), "...")
+
+
+if __name__ == "__main__":
+    main()

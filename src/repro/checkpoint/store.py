@@ -1,0 +1,69 @@
+"""npz-based pytree checkpoint store.
+
+Used by Saturn's introspection mechanism (checkpoint + relaunch when the
+solver produces a new plan) and by the end-to-end training examples.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub" or arr.dtype.itemsize == 0 or \
+                str(arr.dtype) == "bfloat16":
+            arr = np.asarray(leaf, dtype=np.float32)  # bf16 etc: lossless up
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, metadata: Optional[dict] = None):
+    """Atomic save of a pytree (+ JSON metadata) to ``path`` (.npz)."""
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)),
+                               suffix=".npz.tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f)
+
+
+def load_checkpoint(path: str, like: Any):
+    """Restore into the structure of ``like`` (a pytree template)."""
+    with np.load(path) as data:
+        arrays = dict(data)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(
+            str(x.key) if hasattr(x, "key") else str(x.idx) for x in p)
+        arr = arrays[key]
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_metadata(path: str) -> Optional[dict]:
+    meta = path + ".meta.json"
+    if os.path.exists(meta):
+        with open(meta) as f:
+            return json.load(f)
+    return None

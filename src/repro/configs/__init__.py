@@ -1,0 +1,86 @@
+"""Assigned architecture configs (``--arch <id>``) and input-spec
+construction for the four workload shapes.
+
+Every config cites its source in ``ModelConfig.source``.  ``input_specs``
+returns ShapeDtypeStruct stand-ins (no allocation) for the dry-run, or
+concrete arrays for smoke tests via ``concrete_batch``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+ARCH_IDS = [
+    "stablelm-12b",
+    "internlm2-20b",
+    "xlstm-125m",
+    "recurrentgemma-2b",
+    "musicgen-medium",
+    "qwen3-moe-235b-a22b",
+    "gemma3-4b",
+    "internvl2-1b",
+    "h2o-danube-3-4b",
+    "olmoe-1b-7b",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(
+        "repro.configs." + arch_id.replace("-", "_").replace(".", "_"))
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def shape_supported(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k only for sub-quadratic / windowed archs (see DESIGN.md)."""
+    if shape.name == "long_500k":
+        return cfg.long_context
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16):
+    """Abstract model inputs for ``shape`` (train/prefill: full sequence;
+    decode: one token + decode state built separately)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+    if shape.mode == "decode":
+        return {"tokens": tok(b, 1)}
+    if cfg.frontend == "audio":
+        # EnCodec frame embeddings (stub frontend) + codec-token labels
+        return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype),
+                "labels": tok(b, s)}
+    if cfg.frontend == "vision":
+        p = cfg.num_patch_tokens
+        return {"embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model), dtype),
+                "tokens": tok(b, s - p)}
+    return {"tokens": tok(b, s)}
+
+
+def concrete_batch(cfg: ModelConfig, batch: int, seq: int, key=None,
+                   dtype=jnp.float32):
+    """Concrete synthetic batch for smoke tests / CPU training."""
+    rng = np.random.RandomState(0 if key is None else key)
+    out = {}
+    if cfg.frontend == "audio":
+        out["embeds"] = jnp.asarray(
+            rng.randn(batch, seq, cfg.d_model), dtype)
+        out["labels"] = jnp.asarray(
+            rng.randint(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+    elif cfg.frontend == "vision":
+        p = min(cfg.num_patch_tokens, seq - 1)
+        out["embeds"] = jnp.asarray(rng.randn(batch, p, cfg.d_model), dtype)
+        out["tokens"] = jnp.asarray(
+            rng.randint(0, cfg.vocab_size, (batch, seq - p)), jnp.int32)
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.randint(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+    return out

@@ -1,0 +1,64 @@
+"""SaturnSession — the user-facing facade (paper Fig. 1B API):
+
+    sess = SaturnSession(cluster)
+    sess.register_technique(MyTechnique())     # Parallelism Library
+    sess.submit(jobs)                          # model selection workload
+    sess.profile()                             # Trial Runner
+    result = sess.run()                        # Solver + executor
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from .baselines import SaturnPolicy
+from .executor import Policy, SimResult, simulate
+from .job import ClusterSpec, Job
+from .library import ParallelismLibrary
+from .profiler import HARDWARE, HardwareSpec, Profile, TrialRunner
+
+
+class SaturnSession:
+    def __init__(self, cluster: ClusterSpec,
+                 hardware: HardwareSpec = HARDWARE["a100"],
+                 cache_path: Optional[str] = None):
+        self.cluster = cluster
+        self.library = ParallelismLibrary()
+        self.runner = TrialRunner(self.library, hardware, cache_path)
+        self.jobs: List[Job] = []
+        self.profiles: Dict[Tuple[str, str, int], Profile] = {}
+
+    # ------------------------------------------------- Parallelism Library
+    def register_technique(self, technique):
+        return self.library.register(technique)
+
+    # ----------------------------------------------------------- workload
+    def submit(self, jobs):
+        self.jobs.extend(jobs)
+
+    def gpu_counts(self):
+        g = self.cluster.total_gpus
+        counts, c = [], 1
+        while c <= g:
+            counts.append(c)
+            c *= 2
+        if g not in counts:
+            counts.append(g)
+        return counts
+
+    # --------------------------------------------------------- Trial Runner
+    def profile(self, mode: str = "analytic"):
+        self.profiles = self.runner.profile_all(
+            self.jobs, self.gpu_counts(), mode=mode)
+        return self.profiles
+
+    # ------------------------------------------------------ Solver + exec
+    def run(self, policy: Optional[Policy] = None,
+            introspect_every_s: Optional[float] = 600.0,
+            noise_sigma: float = 0.1) -> SimResult:
+        if not self.profiles:
+            self.profile()
+        policy = policy or SaturnPolicy()
+        return simulate(self.jobs, policy, self.profiles, self.cluster,
+                        introspect_every_s=introspect_every_s
+                        if policy.dynamic else None,
+                        noise_sigma=noise_sigma)

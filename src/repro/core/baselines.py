@@ -1,0 +1,203 @@
+"""The paper's four baselines (§3) plus the SATURN policy itself.
+
+- Current Practice: all GPUs of a node to one job, jobs in sequence,
+  task parallelism across nodes.
+- Random: random parallelism, allocation and order (seeded).
+- Optimus (Peng et al., EuroSys'18): greedy marginal-gain GPU allocation.
+- Optimus-Dynamic: Optimus + the introspection mechanism.
+- Saturn: the joint MILP (+ introspection).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .executor import Policy
+from .job import ClusterSpec, Job
+from .solver import Choice, choices_from_profiles, solve_joint
+
+
+def _feasible(job, profiles, g_range):
+    out = []
+    for (jname, tech, g), p in profiles.items():
+        if jname == job.name and p.feasible:
+            out.append((tech, g, p.step_time_s))
+    return out
+
+
+def _best_at_count(job, profiles, g):
+    cands = [(tech, p.step_time_s) for (jn, tech, gg), p in profiles.items()
+             if jn == job.name and gg == g and p.feasible]
+    if not cands:
+        return None
+    return min(cands, key=lambda x: x[1])
+
+
+class CurrentPractice(Policy):
+    """Typical current practice (paper §3): every job gets a full node
+    and runs under the standard go-to setup — FSDP — one job per node at
+    a time, task-parallel across nodes.  (No per-job tuning: that is
+    exactly what Saturn automates.)"""
+
+    name = "current-practice"
+    dynamic = False
+    default_technique = "fsdp"
+
+    def plan(self, jobs, remaining, profiles, cluster, current):
+        order = []
+        for j in jobs:
+            g = cluster.gpus_per_node
+            if (j.name, self.default_technique, g) in profiles and \
+                    profiles[(j.name, self.default_technique, g)].feasible:
+                tech = self.default_technique
+            else:
+                best = _best_at_count(j, profiles, g)
+                if best is None:  # fall back to any feasible
+                    feas = _feasible(j, profiles, None)
+                    if not feas:
+                        raise ValueError(f"{j.name}: infeasible everywhere")
+                    tech, g, _ = min(feas, key=lambda x: x[2])
+                else:
+                    tech = best[0]
+            order.append((j.name, tech, g))
+        return order
+
+
+class CurrentPracticeTuned(CurrentPractice):
+    """Ablation: current practice but with the per-job BEST technique at
+    full-node allocation (isolates Saturn's packing/allocation gains
+    from its parallelism-selection gains)."""
+
+    name = "current-practice-tuned"
+
+    def plan(self, jobs, remaining, profiles, cluster, current):
+        order = []
+        for j in jobs:
+            g = cluster.gpus_per_node
+            best = _best_at_count(j, profiles, g)
+            if best is None:
+                feas = _feasible(j, profiles, None)
+                if not feas:
+                    raise ValueError(f"{j.name}: infeasible everywhere")
+                tech, g, _ = min(feas, key=lambda x: x[2])
+            else:
+                tech = best[0]
+            order.append((j.name, tech, g))
+        return order
+
+
+class RandomPolicy(Policy):
+    name = "random"
+    dynamic = False
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+
+    def plan(self, jobs, remaining, profiles, cluster, current):
+        rng = np.random.RandomState(self.seed)
+        order = []
+        for j in jobs:
+            feas = _feasible(j, profiles, None)
+            tech, g, _ = feas[rng.randint(len(feas))]
+            order.append((j.name, tech, g))
+        rng.shuffle(order)
+        return order
+
+
+class Optimus(Policy):
+    """Greedy marginal-gain allocation: every job starts at its smallest
+    feasible GPU count; remaining GPUs go one-at-a-time to the job with
+    the largest estimated marginal runtime reduction."""
+
+    name = "optimus"
+    dynamic = False
+
+    def plan(self, jobs, remaining, profiles, cluster, current):
+        live = [j for j in jobs if remaining.get(j.name, 0) > 0]
+        runtime_at: Dict[str, Dict[int, Tuple[str, float]]] = {}
+        for j in live:
+            per_g: Dict[int, Tuple[str, float]] = {}
+            for (jn, tech, g), p in profiles.items():
+                if jn != j.name or not p.feasible:
+                    continue
+                t = p.step_time_s * remaining[j.name]
+                if g not in per_g or t < per_g[g][1]:
+                    per_g[g] = (tech, t)
+            runtime_at[j.name] = per_g
+        alloc: Dict[str, int] = {}
+        budget = cluster.total_gpus
+        # min feasible first (paper: one GPU at a time, from zero)
+        for j in sorted(live, key=lambda j: -remaining.get(j.name, 0)):
+            gmin = min(runtime_at[j.name]) if runtime_at[j.name] else None
+            if gmin is not None and gmin <= budget:
+                alloc[j.name] = gmin
+                budget -= gmin
+        # marginal gains
+        improved = True
+        while budget > 0 and improved:
+            improved = False
+            best_gain, best_job, best_g = 0.0, None, None
+            for jname, g in alloc.items():
+                per_g = runtime_at[jname]
+                uppers = [gg for gg in per_g if gg > g and gg - g <= budget]
+                if not uppers:
+                    continue
+                g2 = min(uppers)
+                gain = (per_g[g][1] - per_g[g2][1]) / max(g2 - g, 1)
+                if gain > best_gain:
+                    best_gain, best_job, best_g = gain, jname, g2
+            if best_job is not None:
+                budget -= best_g - alloc[best_job]
+                alloc[best_job] = best_g
+                improved = True
+        order = []
+        for j in live:
+            if j.name in alloc:
+                g = alloc[j.name]
+                order.append((j.name, runtime_at[j.name][g][0], g))
+        # unallocated jobs queue behind with their min feasible config
+        for j in live:
+            if j.name not in alloc and runtime_at[j.name]:
+                gmin = min(runtime_at[j.name])
+                order.append((j.name, runtime_at[j.name][gmin][0], gmin))
+        return order
+
+
+class OptimusDynamic(Optimus):
+    name = "optimus-dynamic"
+    dynamic = True
+
+
+class SaturnPolicy(Policy):
+    """The joint MILP; with ``dynamic`` the simulator re-invokes it at
+    introspection intervals / completions on remaining work."""
+
+    name = "saturn"
+    dynamic = True
+    replan_on_completion = False  # paper: re-solve on fixed intervals
+
+    def __init__(self, n_slots: int = 24, time_limit_s: float = 10.0):
+        self.n_slots = n_slots
+        self.time_limit_s = time_limit_s
+
+    def plan(self, jobs, remaining, profiles, cluster, current):
+        live = []
+        for j in jobs:
+            rem = remaining.get(j.name, j.total_steps)
+            if rem > 0:
+                live.append(Job(j.name, j.cfg, j.batch_size, j.seq_len,
+                                rem, j.lr, j.seed))
+        if not live:
+            return []
+        sol = solve_joint(live, profiles, cluster.total_gpus,
+                          n_slots=self.n_slots,
+                          time_limit_s=self.time_limit_s, mip_gap=0.05)
+        return [(a.job, a.technique, a.n_gpus) for a in sol.order()]
+
+
+class SaturnStatic(SaturnPolicy):
+    """Ablation: the MILP without introspection."""
+    name = "saturn-static"
+    dynamic = False

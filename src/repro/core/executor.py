@@ -1,0 +1,240 @@
+"""Cluster execution: an event-driven simulator (drives the paper-table
+benchmark and the introspection mechanism) and a local runner that really
+trains models on this machine for the end-to-end examples.
+
+The simulator separates *estimated* step times (what policies see, from
+the Trial Runner) from *true* step times (estimate × seeded noise), so
+dynamic policies (introspection) win for the same reason they do on a
+real cluster: plans based on estimates drift from reality, and re-solving
+with observed remaining work recovers the gap — plus freed-GPU
+reallocation at completion events.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .job import ClusterSpec, Job
+from .profiler import Profile
+
+
+@dataclasses.dataclass
+class GanttEntry:
+    job: str
+    technique: str
+    n_gpus: int
+    start_s: float
+    end_s: float
+    kind: str = "run"          # run | restart
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    makespan_s: float
+    gantt: List[GanttEntry]
+    replans: int = 0
+    restarts: int = 0
+
+    def utilization(self, cluster: ClusterSpec) -> float:
+        busy = sum((g.end_s - g.start_s) * g.n_gpus for g in self.gantt
+                   if g.kind == "run")
+        return busy / (self.makespan_s * cluster.total_gpus + 1e-9)
+
+
+class Policy:
+    """Interface: produce an ordered list of (job_name, technique, g).
+
+    The simulator starts jobs in list order whenever GPUs free up
+    (list scheduling).  ``replan`` is invoked at introspection intervals
+    and at completion events if ``dynamic``."""
+
+    name = "policy"
+    dynamic = False           # replan at introspection intervals?
+    replan_on_completion = True   # also replan when a job finishes?
+
+    def plan(self, jobs: List[Job], remaining_steps: Dict[str, int],
+             profiles, cluster: ClusterSpec,
+             current: Dict[str, Tuple[str, int]]) -> List[Tuple[str, str, int]]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class _Running:
+    job: Job
+    technique: str
+    n_gpus: int
+    start_s: float
+    true_step_s: float
+    steps_at_start: int
+
+
+def _noise_factors(jobs, profiles, seed: int, sigma: float):
+    rng = np.random.RandomState(seed)
+    out = {}
+    for key in profiles:
+        out[key] = float(np.exp(rng.randn() * sigma))
+    return out
+
+
+def simulate(jobs: List[Job], policy: Policy,
+             profiles: Dict[Tuple[str, str, int], Profile],
+             cluster: ClusterSpec, *,
+             introspect_every_s: Optional[float] = None,
+             noise_sigma: float = 0.1, noise_seed: int = 0,
+             max_events: int = 100000) -> SimResult:
+    noise = _noise_factors(jobs, profiles, noise_seed, noise_sigma)
+
+    def est_step(jname, tech, g):
+        return profiles[(jname, tech, g)].step_time_s
+
+    def true_step(jname, tech, g):
+        return est_step(jname, tech, g) * noise[(jname, tech, g)]
+
+    remaining = {j.name: j.total_steps for j in jobs}
+    by_name = {j.name: j for j in jobs}
+    waiting = [j.name for j in jobs]
+    running: Dict[str, _Running] = {}
+    free = cluster.total_gpus
+    t = 0.0
+    gantt: List[GanttEntry] = []
+    replans = restarts = 0
+    current_assign: Dict[str, Tuple[str, int]] = {}
+    order: List[Tuple[str, str, int]] = policy.plan(
+        jobs, dict(remaining), profiles, cluster, {})
+    replans += 1
+    next_introspect = (introspect_every_s if introspect_every_s else math.inf)
+
+    def settle(upto_t):
+        """Account finished steps for running jobs up to time upto_t."""
+        for name, r in running.items():
+            done = int((upto_t - r.start_s) / r.true_step_s)
+            remaining[name] = max(0, r.steps_at_start - done)
+
+    def start_fitting():
+        nonlocal free
+        started = True
+        while started:
+            started = False
+            for (jname, tech, g) in order:
+                if jname in waiting and g <= free:
+                    st = true_step(jname, tech, g)
+                    running[jname] = _Running(by_name[jname], tech, g, t,
+                                              st, remaining[jname])
+                    current_assign[jname] = (tech, g)
+                    waiting.remove(jname)
+                    free -= g
+                    started = True
+                    break
+
+    start_fitting()
+    events = 0
+    while (waiting or running) and events < max_events:
+        events += 1
+        if not running:
+            raise RuntimeError(
+                f"deadlock: waiting={waiting} free={free} order={order}")
+        next_done_t, next_done = min(
+            ((r.start_s + r.steps_at_start * r.true_step_s, name)
+             for name, r in running.items()), key=lambda x: x[0])
+        if next_introspect < next_done_t - 1e-12:
+            # ---- introspection point: re-solve on remaining work
+            t = next_introspect
+            next_introspect += introspect_every_s
+            settle(t)
+            if policy.dynamic:
+                replans += 1
+                new_order = policy.plan(
+                    jobs, dict(remaining), profiles, cluster,
+                    dict(current_assign))
+                new_assign = {j: (tech, g) for j, tech, g in new_order}
+                # restart running jobs whose assignment changed
+                for name in list(running):
+                    if name in new_assign and new_assign[name] != \
+                            current_assign.get(name):
+                        r = running.pop(name)
+                        free += r.n_gpus
+                        gantt.append(GanttEntry(name, r.technique, r.n_gpus,
+                                                r.start_s, t))
+                        # checkpoint + relaunch penalty
+                        gantt.append(GanttEntry(name, "restart", 0, t,
+                                                t + cluster.restart_cost_s,
+                                                kind="restart"))
+                        remaining[name] = max(1, remaining[name])
+                        waiting.append(name)
+                        restarts += 1
+                order = new_order
+                # restart penalty: delay those jobs' availability
+                start_fitting()
+            continue
+        # ---- completion event
+        t = next_done_t
+        settle(t)
+        r = running.pop(next_done)
+        remaining[next_done] = 0
+        free += r.n_gpus
+        gantt.append(GanttEntry(next_done, r.technique, r.n_gpus,
+                                r.start_s, t))
+        if policy.dynamic and policy.replan_on_completion and waiting:
+            replans += 1
+            order = policy.plan(jobs, dict(remaining), profiles, cluster,
+                                dict(current_assign))
+        start_fitting()
+    if events >= max_events:
+        raise RuntimeError("simulate: event cap hit")
+    return SimResult(policy.name, t, gantt, replans, restarts)
+
+
+# --------------------------------------------------------------- local run
+
+class LocalRunner:
+    """Really execute a plan on this machine (reduced models, CPU): jobs
+    run in list order under their assigned technique, with checkpointing.
+    Used by the end-to-end examples; wall-times feed back as profiles."""
+
+    def __init__(self, cluster_devices=None, ckpt_dir: str = "/tmp/saturn_ckpts"):
+        self.devices = cluster_devices
+        self.ckpt_dir = ckpt_dir
+
+    def run_job(self, job: Job, technique, n_devices: int, *,
+                steps: Optional[int] = None, resume: bool = True):
+        import time as _time
+
+        import jax
+
+        from ..checkpoint.store import (load_checkpoint, load_metadata,
+                                        save_checkpoint)
+        from ..configs import concrete_batch
+        from ..data.synthetic import SyntheticLM
+        from ..parallelism.build import BuiltJob
+
+        devs = (self.devices or jax.devices())[:n_devices]
+        plan = technique.plan(job.cfg, n_devices)
+        built = BuiltJob(job.cfg, plan, job.opt_cfg, devices=devs)
+        params, opt = built.init(jax.random.PRNGKey(job.seed))
+        start_step = 0
+        path = f"{self.ckpt_dir}/{job.name}.npz"
+        import os
+        if resume and os.path.exists(path):
+            meta = load_metadata(path) or {}
+            start_step = int(meta.get("step", 0))
+            state = load_checkpoint(path, {"params": params, "opt": opt})
+            params, opt = state["params"], state["opt"]
+        n = steps if steps is not None else job.total_steps - start_step
+        data = SyntheticLM(job.cfg, seed=job.seed).batches(
+            job.batch_size, job.seq_len, num_batches=n)
+        t0 = _time.perf_counter()
+        m = {}
+        for b in data:
+            params, opt, m = built.step(params, opt, built.place_batch(b))
+        jax.block_until_ready(params)
+        dt = _time.perf_counter() - t0
+        save_checkpoint(path, {"params": params, "opt": opt},
+                        {"step": start_step + n,
+                         "loss": float(m.get("loss", float("nan")))})
+        return {"job": job.name, "steps": n, "wall_s": dt,
+                "loss": float(m.get("loss", float("nan"))),
+                "done": start_step + n >= job.total_steps}

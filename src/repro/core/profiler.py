@@ -1,0 +1,298 @@
+"""The Trial Runner (paper §2): profiles every ⟨model, parallelism,
+GPU-count⟩ combination the Solver may choose.
+
+Two interchangeable backends share one cache and result type:
+
+- **empirical** — run 1–2 real minibatches of the job's step and time
+  them (exactly the paper's mechanism; requires the device count to be
+  available locally, e.g. under ``--xla_force_host_platform_device_count``).
+- **analytic** — ``jit(...).lower().compile()`` the real step, then derive
+  a three-term roofline time (compute / memory / collectives) from
+  ``cost_analysis()`` + collective bytes parsed out of the HLO, against
+  the target hardware's constants.  This is the CPU-container stand-in
+  for running the two minibatches on real accelerators.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.params import abstract_params, param_count
+from ..models.transformer import model_spec
+from ..parallelism.base import Plan
+from ..parallelism.build import BuiltJob
+from .job import Job
+from .library import ParallelismLibrary
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    flops: float          # peak FLOP/s per device (bf16)
+    hbm_bw: float         # bytes/s per device
+    link_bw: float        # bytes/s per device interconnect
+    hbm_capacity: float   # bytes per device
+
+
+HARDWARE = {
+    # TPU v5e (production dry-run target)
+    "v5e": HardwareSpec("v5e", 197e12, 819e9, 50e9, 16e9),
+    # A100-40GB (the paper's p4d.24xlarge nodes)
+    "a100": HardwareSpec("a100", 312e12, 1555e9, 600e9 / 8, 40e9),
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*([a-z0-9]+)\[([0-9,]*)\][^\n]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_DTYPE_BYTES = {
+    "f32": 4, "f16": 2, "bf16": 2, "f64": 8, "s32": 4, "u32": 4,
+    "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2,
+}
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum output sizes of collective ops per kind from HLO text."""
+    out: Dict[str, float] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    numel *= int(d)
+        out[kind] = out.get(kind, 0.0) + numel * nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class Profile:
+    job: str
+    technique: str
+    n_devices: int
+    step_time_s: float
+    mem_per_device: float
+    feasible: bool
+    source: str
+    terms: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+class TrialRunner:
+    def __init__(self, library: ParallelismLibrary,
+                 hardware: HardwareSpec = HARDWARE["a100"],
+                 cache_path: Optional[str] = None):
+        self.library = library
+        self.hw = hardware
+        self.cache_path = cache_path
+        self._cache: Dict[Tuple[str, str, int, str], Profile] = {}
+        if cache_path and os.path.exists(cache_path):
+            with open(cache_path) as f:
+                for rec in json.load(f):
+                    p = Profile(**rec)
+                    self._cache[(p.job, p.technique, p.n_devices, p.source)] = p
+
+    # ------------------------------------------------------------- public
+    def profile(self, job: Job, technique: str, n_devices: int,
+                mode: str = "analytic") -> Profile:
+        key = (job.name, technique, n_devices, mode)
+        if key in self._cache:
+            return self._cache[key]
+        tech = self.library.get(technique)
+        if not tech.search_space(job.cfg, n_devices):
+            prof = Profile(job.name, technique, n_devices, float("inf"),
+                           float("inf"), False, mode)
+        elif mode == "empirical":
+            prof = self._profile_empirical(job, technique, n_devices)
+        else:
+            prof = self._profile_analytic(job, technique, n_devices)
+        self._cache[key] = prof
+        self._flush()
+        return prof
+
+    def profile_all(self, jobs, gpu_counts, mode="analytic"):
+        """Profile every job under every valid (technique, count)."""
+        out = {}
+        for job in jobs:
+            for tech, g in self.library.candidates(job.cfg, gpu_counts):
+                out[(job.name, tech, g)] = self.profile(job, tech, g, mode)
+        return out
+
+    # --------------------------------------------------------- empirical
+    def _profile_empirical(self, job: Job, technique: str,
+                           n_devices: int) -> Profile:
+        from ..configs import concrete_batch
+        if n_devices > len(jax.devices()):
+            raise RuntimeError(
+                f"empirical profiling needs {n_devices} local devices")
+        tech = self.library.get(technique)
+        plan = tech.plan(job.cfg, n_devices)
+        built = BuiltJob(job.cfg, plan, job.opt_cfg,
+                         devices=jax.devices()[:n_devices])
+        params, opt = built.init(jax.random.PRNGKey(0))
+        batch = built.place_batch(
+            concrete_batch(job.cfg, job.batch_size, job.seq_len))
+        # 1 warmup (compile) + 2 timed minibatches, per the paper
+        params, opt, _ = built.step(params, opt, batch)
+        jax.block_until_ready(params)
+        t0 = time.perf_counter()
+        for _ in range(2):
+            params, opt, _ = built.step(params, opt, batch)
+        jax.block_until_ready(params)
+        dt = (time.perf_counter() - t0) / 2
+        mem = self._mem_estimate(job, plan)
+        return Profile(job.name, technique, n_devices, dt, mem,
+                       mem <= self.hw.hbm_capacity, "empirical")
+
+    # ---------------------------------------------------------- analytic
+    def _profile_analytic(self, job: Job, technique: str,
+                          n_devices: int) -> Profile:
+        tech = self.library.get(technique)
+        plan = tech.plan(job.cfg, n_devices)
+        terms = self._roofline_terms(job, plan)
+        mem = terms.pop("mem_per_device")
+        # roofline: compute and memory overlap with collectives imperfectly;
+        # take max(compute, memory) + collective (conservative serial comm)
+        t = max(terms["compute_s"], terms["memory_s"]) + terms["collective_s"]
+        t *= tech.step_overhead()
+        terms["modeled_step_s"] = t
+        return Profile(job.name, technique, n_devices, t, mem,
+                       mem <= self.hw.hbm_capacity, "analytic", terms)
+
+    def _mem_estimate(self, job: Job, plan: Plan) -> float:
+        """Params + AdamW state + activation estimate, per device."""
+        tech = self.library.get(plan.technique)
+        n_params = param_count(model_spec(job.cfg))
+        # fp32 params + mu + nu = 12 bytes/param, sharded per technique
+        state = 12.0 * n_params * tech.memory_fraction(job.cfg, plan.n_devices)
+        act = self._activation_bytes(job, plan)
+        return state + act
+
+    def _activation_bytes(self, job: Job, plan: Plan) -> float:
+        cfg = job.cfg
+        b, s = job.batch_size, job.seq_len
+        if plan.rules.get("batch"):
+            b = max(1, b // dict(plan.mesh_axes).get(plan.rules["batch"], 1))
+        per_layer = 2.0 * b * s * cfg.d_model * 6  # bf16, ~6 tensors/block
+        layers = cfg.num_layers / plan.stages
+        if plan.remat:
+            return 2.0 * b * s * cfg.d_model * layers  # one residual/layer
+        return per_layer * layers
+
+    def _roofline_terms(self, job: Job, plan: Plan) -> Dict[str, float]:
+        """Lower + compile the real step on a placeholder mesh and read
+        cost_analysis / HLO collectives.  Falls back to a napkin model if
+        the local device pool can't host the mesh."""
+        try:
+            return self._roofline_from_compile(job, plan)
+        except Exception:
+            return self._roofline_napkin(job, plan)
+
+    def _roofline_from_compile(self, job: Job, plan: Plan):
+        from ..configs import concrete_batch
+        n = plan.n_devices
+        if n > len(jax.devices()):
+            raise RuntimeError("not enough local devices to lower")
+        built = BuiltJob(job.cfg, plan, job.opt_cfg,
+                         devices=jax.devices()[:n])
+        spec = model_spec(job.cfg)
+        p_abs = abstract_params(spec, jnp.float32)
+        o_abs = {"mu": abstract_params(spec, jnp.float32),
+                 "nu": abstract_params(spec, jnp.float32),
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        batch = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            concrete_batch(job.cfg, job.batch_size, job.seq_len))
+        lowered = built.step.lower(p_abs, o_abs, batch)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        flops = float(cost.get("flops", 0.0)) / n
+        bytes_acc = float(cost.get("bytes accessed", 0.0)) / n
+        coll = collective_bytes_from_hlo(compiled.as_text())
+        coll_bytes = coll["total"] / n
+        mem = self._compiled_mem(compiled) or self._mem_estimate(job, plan)
+        return {
+            "compute_s": flops / self.hw.flops,
+            "memory_s": bytes_acc / self.hw.hbm_bw,
+            "collective_s": coll_bytes / self.hw.link_bw,
+            "hlo_flops": flops * n,
+            "collective_bytes": coll["total"],
+            "mem_per_device": mem,
+        }
+
+    @staticmethod
+    def _compiled_mem(compiled) -> Optional[float]:
+        try:
+            ma = compiled.memory_analysis()
+            return float(ma.temp_size_in_bytes + ma.argument_size_in_bytes +
+                         ma.output_size_in_bytes) / max(
+                             len(compiled.devices()), 1)
+        except Exception:
+            return None
+
+    def _roofline_napkin(self, job: Job, plan: Plan) -> Dict[str, float]:
+        """6·N·D flops model when compile-based profiling is unavailable.
+
+        Includes the two effects that make right-sizing matter (and that
+        Saturn exploits): (a) MXU/SM utilization collapses when the
+        per-device work gets small (tiny models on many GPUs waste
+        capacity), and (b) fixed per-step latency (launch + collective
+        setup) grows with device count."""
+        cfg = job.cfg
+        n_params = param_count(model_spec(cfg))
+        if cfg.is_moe:
+            n_active = n_params * (cfg.moe.top_k / cfg.moe.num_experts)
+        else:
+            n_active = n_params
+        g = plan.n_devices
+        tokens = job.batch_size * job.seq_len
+        tok_dev = tokens if plan.technique == "tp" else tokens / g
+        # utilization: saturates with per-device tokens; the knee sits
+        # higher for narrow models (small matmuls need more batch to
+        # fill the MXU/SMs) — this is what makes right-sizing matter.
+        # TP shards the *width*, so its effective matmul width is d/g.
+        d_eff = cfg.d_model / g if plan.technique == "tp" else cfg.d_model
+        knee = 8192.0 * 2048.0 / (d_eff + 2048.0)
+        util = (d_eff / (d_eff + 1024.0)) * (tok_dev / (tok_dev + knee))
+        util = max(util, 0.02)
+        flops = 6.0 * n_active * tokens / g
+        compute_s = flops / (self.hw.flops * util)
+        # fixed per-step overhead: launch + per-layer collective latency
+        fixed_s = 2e-3 + 1e-4 * g + cfg.num_layers * 5e-5 * np.log2(max(g, 2))
+        # bytes: params read 3x (fwd, bwd, opt) + activations
+        tech = self.library.get(plan.technique)
+        bytes_acc = (12.0 * n_params * tech.memory_fraction(cfg, g)
+                     + self._activation_bytes(job, plan) * 4)
+        coll = 4.0 * n_params / max(g, 1) if g > 1 else 0.0  # grad reduce
+        return {
+            "compute_s": compute_s + fixed_s,
+            "memory_s": bytes_acc / self.hw.hbm_bw,
+            "collective_s": coll / self.hw.link_bw,
+            "hlo_flops": flops * g,
+            "collective_bytes": coll * g,
+            "mem_per_device": self._mem_estimate(job, plan),
+            "utilization": util,
+        }
+
+    # -------------------------------------------------------------- misc
+    def _flush(self):
+        if not self.cache_path:
+            return
+        os.makedirs(os.path.dirname(os.path.abspath(self.cache_path)),
+                    exist_ok=True)
+        with open(self.cache_path, "w") as f:
+            json.dump([p.to_json() for p in self._cache.values()], f)

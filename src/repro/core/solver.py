@@ -1,0 +1,426 @@
+"""Saturn's joint Solver (paper §2): parallelism selection + GPU
+allocation + scheduling as one mixed-integer linear program.
+
+Time-indexed formulation (the tech-report formulation, Gurobi swapped
+for HiGHS via ``scipy.optimize.milp`` — same MILP, different solver):
+
+  binaries  x[j,c,t]  — job j starts config c = (technique, g, duration)
+                         at time slot t
+  continuous M         — makespan
+
+  min  M + eps * sum t*x                    (eps tie-breaks earlier starts)
+  s.t. sum_{c,t} x[j,c,t] = 1               for every job j
+       sum_{j,c} g_c * sum_{t in (tau-d_c, tau]} x[j,c,t] <= G   for all tau
+       (t + d_jc) * delta * x[j,c,t] <= M   for all j,c,t
+
+A greedy list-scheduling fallback guards against solver timeouts (and is
+also used to compute an upper bound that sizes the horizon).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import os
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+from scipy import sparse
+from scipy.optimize import LinearConstraint, milp, Bounds
+
+
+@contextlib.contextmanager
+def _quiet_stdout():
+    """HiGHS prints C-level debug lines; mute fd 1 during the solve."""
+    try:
+        saved = os.dup(1)
+        devnull = os.open(os.devnull, os.O_WRONLY)
+        os.dup2(devnull, 1)
+        yield
+    finally:
+        os.dup2(saved, 1)
+        os.close(saved)
+        os.close(devnull)
+
+from .job import Job
+from .profiler import Profile
+
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    """One point in a job's config space."""
+    technique: str
+    n_gpus: int
+    runtime_s: float          # total remaining runtime under this config
+
+
+@dataclasses.dataclass
+class Assignment:
+    job: str
+    technique: str
+    n_gpus: int
+    start_s: float
+    runtime_s: float
+
+    @property
+    def end_s(self) -> float:
+        return self.start_s + self.runtime_s
+
+
+@dataclasses.dataclass
+class Solution:
+    assignments: List[Assignment]
+    makespan_s: float
+    solver: str               # "milp" | "greedy"
+    milp_status: Optional[str] = None
+
+    def order(self) -> List[Assignment]:
+        return sorted(self.assignments, key=lambda a: (a.start_s, a.job))
+
+
+def choices_from_profiles(job: Job, profiles: Dict[Tuple[str, str, int], Profile],
+                          *, prune: bool = True) -> List[Choice]:
+    """Feasible (technique, g) choices with total runtimes for one job.
+
+    prune=True drops Pareto-dominated choices (same or more GPUs, same or
+    worse runtime) — a large constant-factor MILP size reduction that
+    does not change the optimum.
+    """
+    out = []
+    for (jname, tech, g), p in profiles.items():
+        if jname != job.name or not p.feasible:
+            continue
+        out.append(Choice(tech, g, p.step_time_s * job.total_steps))
+    if prune and out:
+        out.sort(key=lambda c: (c.n_gpus, c.runtime_s))
+        kept: List[Choice] = []
+        best_rt = math.inf
+        for c in out:
+            if c.runtime_s < best_rt - 1e-9:
+                kept.append(c)
+                best_rt = c.runtime_s
+        out = kept
+    return out
+
+
+def greedy_schedule(jobs: List[Job], choices: Dict[str, List[Choice]],
+                    total_gpus: int) -> Solution:
+    """List scheduling: longest-remaining-work first, each job on its
+    best-throughput feasible choice that fits when it starts."""
+    # rank jobs by their best-possible runtime, longest first
+    ranked = sorted(
+        jobs, key=lambda j: -min((c.runtime_s for c in choices[j.name]),
+                                 default=0.0))
+    free = total_gpus
+    t = 0.0
+    running: List[Tuple[float, Assignment]] = []
+    out: List[Assignment] = []
+    queue = list(ranked)
+    while queue or running:
+        progressed = True
+        while progressed and queue:
+            progressed = False
+            for job in list(queue):
+                fits = [c for c in choices[job.name] if c.n_gpus <= free]
+                if fits:
+                    c = min(fits, key=lambda c: c.runtime_s)
+                    a = Assignment(job.name, c.technique, c.n_gpus, t,
+                                   c.runtime_s)
+                    out.append(a)
+                    running.append((a.end_s, a))
+                    free -= c.n_gpus
+                    queue.remove(job)
+                    progressed = True
+        if not running:
+            if queue:  # nothing fits at all — infeasible choice sets
+                raise RuntimeError("greedy: no feasible choice fits cluster")
+            break
+        running.sort(key=lambda x: x[0])
+        t_end, done = running.pop(0)
+        t = t_end
+        free += done.n_gpus
+    makespan = max((a.end_s for a in out), default=0.0)
+    return Solution(out, makespan, "greedy")
+
+
+def solve_joint(jobs: List[Job],
+                profiles: Dict[Tuple[str, str, int], Profile],
+                total_gpus: int, *,
+                n_slots: int = 24,
+                time_limit_s: float = 30.0,
+                mip_gap: float = 0.02) -> Solution:
+    """The joint MILP.  Falls back to greedy on infeasibility/timeout."""
+    choice_map = {j.name: choices_from_profiles(j, profiles) for j in jobs}
+    for j in jobs:
+        if not choice_map[j.name]:
+            raise ValueError(f"job {j.name}: no feasible (technique, g)")
+    ub = greedy_schedule(jobs, choice_map, total_gpus)
+    horizon = max(ub.makespan_s, 1e-6) * 1.05
+    delta = horizon / n_slots
+
+    # variable layout: x[j, c, t] flattened, then M last
+    index: List[Tuple[int, Choice, int]] = []   # (job_idx, choice, slot)
+    var_of: Dict[Tuple[int, int, int], int] = {}
+    for ji, j in enumerate(jobs):
+        for ci, c in enumerate(choice_map[j.name]):
+            dur = max(1, math.ceil(c.runtime_s / delta - 1e-9))
+            if dur > n_slots:
+                continue
+            for t in range(n_slots - dur + 1):
+                var_of[(ji, ci, t)] = len(index)
+                index.append((ji, c, t))
+    nx = len(index)
+    nvar = nx + 1  # + makespan
+    M_idx = nx
+
+    rows, cols, vals = [], [], []
+    lbs, ubs = [], []
+    r = 0
+    # (1) each job picks exactly one (choice, start)
+    for ji in range(len(jobs)):
+        for (ji2, ci, t), vi in var_of.items():
+            if ji2 == ji:
+                rows.append(r), cols.append(vi), vals.append(1.0)
+        lbs.append(1.0), ubs.append(1.0)
+        r += 1
+    # (2) capacity per slot
+    dur_of = {}
+    for (ji, ci, t), vi in var_of.items():
+        c = choice_map[jobs[ji].name][ci]
+        dur_of[vi] = max(1, math.ceil(c.runtime_s / delta - 1e-9))
+    for tau in range(n_slots):
+        any_entry = False
+        for (ji, ci, t), vi in var_of.items():
+            c = choice_map[jobs[ji].name][ci]
+            if t <= tau < t + dur_of[vi]:
+                rows.append(r), cols.append(vi), vals.append(float(c.n_gpus))
+                any_entry = True
+        if any_entry:
+            lbs.append(-np.inf), ubs.append(float(total_gpus))
+            r += 1
+    # (3) makespan: (t + dur)*delta * x - M <= 0
+    for (ji, ci, t), vi in var_of.items():
+        end = (t + dur_of[vi]) * delta
+        rows.append(r), cols.append(vi), vals.append(end)
+        rows.append(r), cols.append(M_idx), vals.append(-1.0)
+        lbs.append(-np.inf), ubs.append(0.0)
+        r += 1
+
+    A = sparse.coo_matrix((vals, (rows, cols)), shape=(r, nvar)).tocsc()
+    cons = LinearConstraint(A, np.array(lbs), np.array(ubs))
+    cvec = np.zeros(nvar)
+    cvec[M_idx] = 1.0
+    eps = delta * 1e-4
+    for key, vi in var_of.items():
+        cvec[vi] = eps * key[2]
+    integrality = np.ones(nvar)
+    integrality[M_idx] = 0
+    bounds = Bounds(np.zeros(nvar),
+                    np.concatenate([np.ones(nx), [np.inf]]))
+    try:
+        with _quiet_stdout():
+            res = milp(c=cvec, constraints=cons, integrality=integrality,
+                       bounds=bounds,
+                       options={"time_limit": time_limit_s,
+                                "mip_rel_gap": mip_gap,
+                                "presolve": True})
+    except Exception:
+        return ub
+    if not res.success or res.x is None:
+        return ub
+    x = res.x
+    key_of = {vi: key for key, vi in var_of.items()}
+    assignments = []
+    for ji, j in enumerate(jobs):
+        best_vi, best_val = None, 0.5
+        for (ji2, ci, t), vi in var_of.items():
+            if ji2 == ji and x[vi] > best_val:
+                best_vi, best_val = vi, x[vi]
+        if best_vi is None:
+            return ub
+        _, ci, t = key_of[best_vi]
+        c = choice_map[j.name][ci]
+        assignments.append(Assignment(j.name, c.technique, c.n_gpus,
+                                      t * delta, c.runtime_s))
+    makespan = max(a.end_s for a in assignments)
+    sol = Solution(assignments, makespan, "milp", milp_status=res.message)
+    # keep whichever is better (slot rounding can make MILP worse)
+    return sol if makespan <= ub.makespan_s + 1e-6 else ub
+
+
+def solve_joint_nodes(jobs: List[Job],
+                      profiles: Dict[Tuple[str, str, int], Profile],
+                      nodes: int, gpus_per_node: int, *,
+                      n_slots: int = 16,
+                      time_limit_s: float = 30.0,
+                      mip_gap: float = 0.05) -> Solution:
+    """Node-locality-aware joint MILP.
+
+    Single-node configs (g <= gpus_per_node) additionally choose a node;
+    larger configs must be whole-node multiples (you allocate whole
+    p4d/ICI-slice nodes) and pick which nodes via binaries y[j,c,t,nu].
+    Per-(node, slot) capacity replaces the flat pool constraint, so two
+    5-GPU jobs can NOT share a single 8-GPU node with a third.
+    """
+    G = nodes * gpus_per_node
+    choice_map = {j.name: choices_from_profiles(j, profiles) for j in jobs}
+    for j in jobs:
+        kept = []
+        for c in choice_map[j.name]:
+            if c.n_gpus <= gpus_per_node or c.n_gpus % gpus_per_node == 0:
+                kept.append(c)
+        choice_map[j.name] = kept
+        if not kept:
+            raise ValueError(f"job {j.name}: no node-feasible choice")
+    ub = greedy_schedule(jobs, choice_map, G)  # node-UNaware (optimistic)
+    seq_total = sum(min(c.runtime_s for c in choice_map[j.name])
+                    for j in jobs)  # sequential = always node-feasible
+    return _solve_nodes_at_horizon(
+        jobs, choice_map, ub, nodes, gpus_per_node,
+        horizons=[max(ub.makespan_s, 1e-6) * 1.3, seq_total * 1.05],
+        n_slots=n_slots, time_limit_s=time_limit_s, mip_gap=mip_gap)
+
+
+def _solve_nodes_at_horizon(jobs, choice_map, ub, nodes, gpus_per_node, *,
+                            horizons, n_slots, time_limit_s, mip_gap):
+    best = None
+    for horizon in horizons:
+        sol = _solve_nodes_once(jobs, choice_map, nodes, gpus_per_node,
+                                horizon=horizon, n_slots=n_slots,
+                                time_limit_s=time_limit_s, mip_gap=mip_gap)
+        if sol is not None and (best is None
+                                or sol.makespan_s < best.makespan_s):
+            best = sol
+        if best is not None:
+            break  # first feasible horizon wins (tighter delta)
+    return best if best is not None else ub
+
+
+def _solve_nodes_once(jobs, choice_map, nodes, gpus_per_node, *,
+                      horizon, n_slots, time_limit_s, mip_gap):
+    delta = horizon / n_slots
+
+    # variables: x[j,c,t,nu] for single-node; for whole-node configs one
+    # x[j,c,t] plus y[j,c,t,nu] node-occupancy binaries
+    xvars: List[Tuple] = []   # (kind, ji, ci, t, nu_or_None)
+    var_of: Dict[Tuple, int] = {}
+
+    def add(key):
+        var_of[key] = len(xvars)
+        xvars.append(key)
+
+    dur_of: Dict[Tuple[int, int], int] = {}
+    for ji, j in enumerate(jobs):
+        for ci, c in enumerate(choice_map[j.name]):
+            dur = max(1, math.ceil(c.runtime_s / delta - 1e-9))
+            dur_of[(ji, ci)] = dur
+            if dur > n_slots:
+                continue
+            for t in range(n_slots - dur + 1):
+                if c.n_gpus <= gpus_per_node:
+                    for nu in range(nodes):
+                        add(("x1", ji, ci, t, nu))
+                else:
+                    add(("xm", ji, ci, t, None))
+                    for nu in range(nodes):
+                        add(("y", ji, ci, t, nu))
+    nx = len(xvars)
+    M_idx = nx
+    nvar = nx + 1
+
+    rows, cols, vals, lbs, ubs = [], [], [], [], []
+    r = 0
+    # (1) one (choice, start[, node-set]) per job
+    for ji in range(len(jobs)):
+        found = False
+        for key, vi in var_of.items():
+            if key[0] in ("x1", "xm") and key[1] == ji:
+                rows.append(r), cols.append(vi), vals.append(1.0)
+                found = True
+        if not found:
+            return None
+        lbs.append(1.0), ubs.append(1.0)
+        r += 1
+    # (2) whole-node jobs: sum_nu y == k * x
+    for key, vi in var_of.items():
+        if key[0] != "xm":
+            continue
+        _, ji, ci, t, _ = key
+        c = choice_map[jobs[ji].name][ci]
+        k = c.n_gpus // gpus_per_node
+        rows.append(r), cols.append(vi), vals.append(-float(k))
+        for nu in range(nodes):
+            yv = var_of[("y", ji, ci, t, nu)]
+            rows.append(r), cols.append(yv), vals.append(1.0)
+        lbs.append(0.0), ubs.append(0.0)
+        r += 1
+    # (3) per-(node, slot) capacity
+    for nu in range(nodes):
+        for tau in range(n_slots):
+            any_e = False
+            for key, vi in var_of.items():
+                kind, ji, ci, t = key[0], key[1], key[2], key[3]
+                if kind == "x1" and key[4] == nu:
+                    c = choice_map[jobs[ji].name][ci]
+                    if t <= tau < t + dur_of[(ji, ci)]:
+                        rows.append(r), cols.append(vi)
+                        vals.append(float(c.n_gpus))
+                        any_e = True
+                elif kind == "y" and key[4] == nu:
+                    if t <= tau < t + dur_of[(ji, ci)]:
+                        rows.append(r), cols.append(vi)
+                        vals.append(float(gpus_per_node))
+                        any_e = True
+            if any_e:
+                lbs.append(-np.inf), ubs.append(float(gpus_per_node))
+                r += 1
+    # (4) makespan
+    for key, vi in var_of.items():
+        if key[0] not in ("x1", "xm"):
+            continue
+        _, ji, ci, t = key[0], key[1], key[2], key[3]
+        end = (t + dur_of[(ji, ci)]) * delta
+        rows.append(r), cols.append(vi), vals.append(end)
+        rows.append(r), cols.append(M_idx), vals.append(-1.0)
+        lbs.append(-np.inf), ubs.append(0.0)
+        r += 1
+
+    A = sparse.coo_matrix((vals, (rows, cols)), shape=(r, nvar)).tocsc()
+    cvec = np.zeros(nvar)
+    cvec[M_idx] = 1.0
+    for key, vi in var_of.items():
+        if key[0] in ("x1", "xm"):
+            cvec[vi] = delta * 1e-4 * key[3]
+    integrality = np.ones(nvar)
+    integrality[M_idx] = 0
+    bounds = Bounds(np.zeros(nvar),
+                    np.concatenate([np.ones(nx), [np.inf]]))
+    try:
+        with _quiet_stdout():
+            res = milp(c=cvec,
+                       constraints=LinearConstraint(A, np.array(lbs),
+                                                    np.array(ubs)),
+                       integrality=integrality, bounds=bounds,
+                       options={"time_limit": time_limit_s,
+                                "mip_rel_gap": mip_gap, "presolve": True})
+    except Exception:
+        return None
+    if not res.success or res.x is None:
+        return None
+    x = res.x
+    assignments = []
+    for ji, j in enumerate(jobs):
+        pick = None
+        for key, vi in var_of.items():
+            if key[0] in ("x1", "xm") and key[1] == ji and x[vi] > 0.5:
+                pick = key
+                break
+        if pick is None:
+            return None
+        ci, t = pick[2], pick[3]
+        c = choice_map[j.name][ci]
+        assignments.append(Assignment(j.name, c.technique, c.n_gpus,
+                                      t * delta, c.runtime_s))
+    makespan = max(a.end_s for a in assignments)
+    return Solution(assignments, makespan, "milp-nodes",
+                    milp_status=res.message)

@@ -1,0 +1,124 @@
+"""Pallas TPU flash attention (causal, GQA, optional sliding window).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) — the kv dimension is
+minor-most, so each (b, h, iq) program visits its kv blocks sequentially
+and accumulates the online softmax in VMEM scratch (acc, m, l).  Blocks
+whose entire kv range is masked (beyond causal front or outside the
+sliding window) are skipped with ``pl.when``.
+
+TPU-native adaptation notes (vs the CUDA algorithm): tile shapes are
+chosen for the 128x128 MXU and 8x128 VPU lanes; m/l statistics are kept
+as (block_q, 128) lane-replicated tiles (TPU has no warp shuffles — the
+reduction lives in VMEM vectors); kv tiles stream HBM->VMEM via BlockSpec
+index maps rather than cp.async.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  block_q: int, block_k: int, window: int, seq_len: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # skip blocks fully outside the causal (and window) band
+    causal_live = k_start <= q_start + block_q - 1
+    window_live = True
+    if window:
+        window_live = (k_start + block_k - 1) >= (q_start - window + 1)
+
+    @pl.when(causal_live & window_live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())))            # (bq, bk)
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        mask = k_pos <= q_pos
+        if window:
+            mask &= (q_pos - k_pos) < window
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_prev = m_ref[:, :1]                          # (bq, 1)
+        m_cur = jnp.max(scores, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(scores - m_new)                    # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_new = l_ref[:, :1] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())))
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0, 0, :, :] = (acc_ref[...] /
+                             jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, window: int = 0, *, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, S, H, D) pre-scaled; k, v: (B, S, Kv, D) -> (B, S, H, D).
+
+    GQA: query head h reads kv head h // (H // Kv).
+    """
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qpk = h // kvh
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    nq, nk = s // block_q, s // block_k
+    # layout: (B, H, S, D) for clean tiling
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    grid = (b, h, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                          window=window, seq_len=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, iq, ik, _qpk=qpk: (b_, h_ // _qpk, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h_, iq, ik, _qpk=qpk: (b_, h_ // _qpk, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h_, iq, ik: (b_, h_, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),      # acc
+            pltpu.VMEM((block_q, _LANES), jnp.float32), # m
+            pltpu.VMEM((block_q, _LANES), jnp.float32), # l
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel for chunkwise-parallel mLSTM (xLSTM matrix memory).
+
+Grid: (batch, heads, num_chunks), chunks minor-most so each (b, h)
+program walks its sequence chunks in order carrying the recurrent state
+(C: d x d matrix memory, n: d normalizer, m: scalar stabilizer) in VMEM
+scratch.  Within a chunk the math is the quadratic intra-chunk form —
+two (L, d) x (d, L/d) matmuls on the MXU — plus rank-L state update,
+exactly mirroring ``repro.models.blockwise.mlstm_chunked`` (the oracle).
+
+TPU adaptation: the stabilizer m is a lane-replicated (1, 128) tile; the
+decay matrix is built from a cumulative-sum of log-sigmoid forget gates
+with a tril mask from 2-D iota (no warp-level primitives involved).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_LANES = 128
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, o_ref,
+                  c_ref, n_ref, m_ref, *, chunk: int, head_dim: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+
+    L, d = chunk, head_dim
+    scale = d ** -0.5
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (L, d)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    it = i_ref[0, 0].astype(jnp.float32)               # (L,)
+    lf = jax.nn.log_sigmoid(f_ref[0, 0].astype(jnp.float32))
+    m_prev = m_ref[0, 0]
+    C = c_ref[...]
+    n = n_ref[...][:, 0]                               # (d,)
+
+    cum = jnp.cumsum(lf)                               # (L,)
+    g = cum[-1]
+    row = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    logd = cum[:, None] - cum[None, :] + it[None, :]
+    logd = jnp.where(row >= col, logd, -jnp.inf)
+    m_intra = jnp.max(logd, axis=1)                    # (L,)
+    m_inter = cum + m_prev
+    m_i = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+    dmat = jnp.exp(logd - m_i[:, None])
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+    cmat = scores * dmat                               # (L, L)
+    inter_w = jnp.exp(m_inter - m_i)                   # (L,)
+    h_inter = jax.lax.dot_general(q, C, (((1,), (0,)), ((), ()))) \
+        * inter_w[:, None]                             # (L, d)
+    n_inter = (q @ n) * inter_w                        # (L,)
+    h_intra = jax.lax.dot_general(cmat, v, (((1,), (0,)), ((), ())))
+    n_total = jnp.sum(cmat, axis=1) + n_inter
+    denom = jnp.maximum(jnp.abs(n_total), jnp.exp(-m_i))
+    o_ref[0, 0, :, :] = ((h_intra + h_inter)
+                         / denom[:, None]).astype(o_ref.dtype)
+
+    # ---- state update
+    m_next = jnp.maximum(g + m_prev, jnp.max(it + g - cum))
+    decay = jnp.exp(g + m_prev - m_next)
+    w_in = jnp.exp(it + g - cum - m_next)              # (L,)
+    kw = k * w_in[:, None]                             # (L, d)
+    c_ref[...] = decay * C + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())))               # (d, d)
+    n_new = decay * n + jnp.sum(kw, axis=0)            # (d,)
+    n_ref[...] = jnp.broadcast_to(n_new[:, None], n_ref.shape)
+    m_ref[...] = jnp.full_like(m_ref, m_next)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk(q, k, v, i_pre, f_pre, *, chunk: int = 128,
+                interpret: bool = False):
+    """q,k,v: (B,S,H,D); i_pre,f_pre: (B,S,H) -> (B,S,H,D).
+
+    Matches ``repro.models.blockwise.mlstm_chunked`` /
+    ``repro.models.recurrent.mlstm_parallel_ref``."""
+    b, s, h, d = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    qt = q.transpose(0, 2, 1, 3)                       # (B,H,S,D)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    ip = i_pre.transpose(0, 2, 1)                      # (B,H,S)
+    fp = f_pre.transpose(0, 2, 1)
+    grid = (b, h, nc)
+    seq_spec = pl.BlockSpec((1, 1, chunk, d),
+                            lambda b_, h_, ic: (b_, h_, ic, 0))
+    gate_spec = pl.BlockSpec((1, 1, chunk),
+                             lambda b_, h_, ic: (b_, h_, ic))
+    out = pl.pallas_call(
+        functools.partial(_mlstm_kernel, chunk=chunk, head_dim=d),
+        grid=grid,
+        in_specs=[seq_spec, seq_spec, seq_spec, gate_spec, gate_spec],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, d), jnp.float32),           # C
+            pltpu.VMEM((d, _LANES), jnp.float32),      # n (lane-replicated)
+            pltpu.VMEM((1, _LANES), jnp.float32),      # m (lane-replicated)
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, ip, fp)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (single source of truth —
+these re-export the model-layer reference implementations the kernels
+must match bit-for-bit up to fp32 reassociation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.blockwise import blockwise_attention as _blockwise_attention
+from ..models.blockwise import mlstm_chunked as _mlstm_chunked
+from ..models.recurrent import mlstm_parallel_ref as _mlstm_parallel
+from ..models.recurrent import rglru_scan_ref as _rglru_scan
+
+
+def attention_ref(q, k, v, window: int = 0):
+    """Naive causal GQA attention.  q pre-scaled: (B,S,H,D)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qr = q.reshape(b, s, kvh, h // kvh, d)
+    scores = jnp.einsum("bskqd,blkd->bkqsl", qr, k).astype(jnp.float32)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = j <= i
+    if window:
+        mask &= (i - j) < window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkqsl,blkd->bskqd", p, v)
+    return out.reshape(b, s, h, d)
+
+
+def blockwise_attention_ref(q, k, v, window: int = 0):
+    return _blockwise_attention(q, k, v, window=window)
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t via associative scan."""
+    return _rglru_scan(a, b)
+
+
+def mlstm_ref(q, k, v, i_pre, f_pre):
+    """Quadratic-form mLSTM."""
+    return _mlstm_parallel(q, k, v, i_pre, f_pre)
+
+
+def mlstm_chunked_ref(q, k, v, i_pre, f_pre, chunk: int = 256):
+    return _mlstm_chunked(q, k, v, i_pre, f_pre, chunk=chunk)

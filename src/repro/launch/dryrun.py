@@ -1,0 +1,289 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count at first
+#   init.  512 placeholder host devices host the production meshes.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and record memory / cost / collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun
+
+Every combination must compile; failures are bugs in the sharding
+config.  Results feed EXPERIMENTS.md §Dry-run and §Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from ..configs import ARCH_IDS, get_config, input_specs, shape_supported
+from ..models.config import INPUT_SHAPES, InputShape, ModelConfig
+from ..models.params import abstract_params
+from ..models.transformer import model_spec
+from .hlo_analysis import analyze as analyze_hlo
+from ..parallelism.context import axis_rules
+from ..parallelism.shardings import param_shardings_from_rules
+from .mesh import (activation_rules, batch_axes, cache_shardings,
+                   make_production_mesh, production_param_rules)
+
+
+def _batch_shardings(batch_specs, mesh, bax):
+    def mk(x):
+        if x.ndim == 0 or bax is None:
+            return NamedSharding(mesh, PartitionSpec())
+        return NamedSharding(mesh, PartitionSpec(bax))
+    return jax.tree.map(mk, batch_specs)
+
+
+def build_lowerable(cfg: ModelConfig, shape: InputShape, mesh,
+                    multi_pod: bool, *, remat: Optional[bool] = None,
+                    extra_opts: Optional[dict] = None,
+                    rules_override: Optional[dict] = None,
+                    param_rules_override: Optional[dict] = None,
+                    cache_policy: str = "heads"):
+    """Returns (fn, args, in_shardings) ready for jit/lower."""
+    from ..optim.adamw import AdamWConfig
+    from ..train.steps import make_train_step
+    from ..models.transformer import prefill_forward, decode_step
+
+    prules = production_param_rules(cfg, mesh, multi_pod)
+    if param_rules_override:
+        prules.update(param_rules_override)
+        prules = {k: v for k, v in prules.items() if v is not None}
+    arules = activation_rules(cfg, shape, multi_pod)
+    rules = {**prules, **arules}
+    if rules_override:
+        rules.update(rules_override)
+    spec_tree = model_spec(cfg)
+    p_sh = param_shardings_from_rules(spec_tree, prules, mesh)
+    p_abs = abstract_params(spec_tree, jnp.bfloat16)
+    bax = arules["batch"]
+    opts = extra_opts or {}
+
+    if shape.mode == "train":
+        if remat is None:
+            remat = True  # large-model default: activation checkpointing
+        opt_cfg = AdamWConfig()
+        base = make_train_step(cfg, opt_cfg, remat=remat, opts=opts)
+
+        def fn(params, opt_state, batch):
+            with axis_rules(rules, mesh):
+                return base(params, opt_state, batch)
+
+        o_sh = {"mu": p_sh, "nu": p_sh,
+                "step": NamedSharding(mesh, PartitionSpec())}
+        o_abs = {"mu": abstract_params(spec_tree, jnp.float32),
+                 "nu": abstract_params(spec_tree, jnp.float32),
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        batch_specs = input_specs(cfg, shape)
+        in_sh = (p_sh, o_sh, _batch_shardings(batch_specs, mesh, bax))
+        return fn, (p_abs, o_abs, batch_specs), in_sh
+
+    if shape.mode == "prefill":
+        def fn(params, batch):
+            with axis_rules(rules, mesh):
+                return prefill_forward(params, cfg, batch, opts=opts)
+        batch_specs = input_specs(cfg, shape)
+        in_sh = (p_sh, _batch_shardings(batch_specs, mesh, bax))
+        return fn, (p_abs, batch_specs), in_sh
+
+    # decode: serve_step — one token against a seq_len cache
+    state_sh, state_abs = cache_shardings(cfg, shape, mesh, multi_pod,
+                                          policy=cache_policy)
+
+    def fn(params, tokens, state):
+        with axis_rules(rules, mesh):
+            logits, new_state = decode_step(params, cfg, tokens, state,
+                                            opts=opts)
+            nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            return nxt, new_state
+
+    tok_specs = input_specs(cfg, shape)["tokens"]
+    tok_sh = NamedSharding(
+        mesh, PartitionSpec(bax) if bax else PartitionSpec())
+    in_sh = (p_sh, tok_sh, state_sh)
+    return fn, (p_abs, tok_specs, state_abs), in_sh
+
+
+def optimized_overrides(cfg: ModelConfig, shape: InputShape) -> dict:
+    """The beyond-paper sharding presets found in EXPERIMENTS.md §Perf.
+
+    - small models (<1B): pure data parallelism over all 256/512 chips
+      (TP of a small model is pure overhead), no remat, batched-gradient
+      sLSTM.
+    - large dense train: FSDP-256 (ZeRO-3 over both axes) instead of
+      2-D FSDP x TP — param all-gathers replace per-layer activation
+      all-reduces; larger blockwise-attention kv chunks.
+    - MoE: keep expert parallelism (experts must shard), FSDP the rest.
+    - decode: sequence-sharded KV cache + token-replicated activations
+      (weights stay put; tokens move).
+    """
+    from functools import partial
+    from ..models.blockwise import blockwise_attention
+    from ..models.params import param_count
+    kw: dict = {"extra_opts": {}}
+    n_params = param_count(model_spec(cfg))
+    small = n_params < 1e9
+    if shape.mode == "train":
+        if small:
+            kw["rules_override"] = {"batch": ("data", "model")}
+            kw["param_rules_override"] = {
+                "ffn": None, "heads": None, "rnn": None, "vocab": None,
+                "embed": None, "kv_heads": None, "experts": None}
+            kw["remat"] = False
+        elif not cfg.is_moe:
+            kw["rules_override"] = {"batch": ("data", "model"),
+                                    "vocab": None}
+            kw["param_rules_override"] = {
+                "heads": None, "kv_heads": None, "ffn": None,
+                "rnn": None, "vocab": None}
+        # MoE train keeps the expert-parallel 2-D layout (experts must
+        # shard over model; embed stays FSDP over data)
+        kw["extra_opts"]["slstm_batched_grad"] = True
+        if not small:
+            kw["extra_opts"]["attn_fn"] = partial(
+                _blockwise_big_chunks)
+    elif shape.mode == "prefill":
+        kw["extra_opts"]["slstm_batched_grad"] = True
+        kw["extra_opts"]["attn_fn"] = partial(_blockwise_big_chunks)
+    else:  # decode
+        # sequence-sharded cache wins when kv heads / head_dim cannot
+        # shard cleanly; windowed-attention archs (gemma3, recurrent-
+        # gemma, danube) measured better with the baseline heads policy
+        if cfg.window_size == 0:
+            kw["cache_policy"] = "seq"
+        if cfg.is_moe or shape.global_batch <= 1:
+            kw["rules_override"] = {"batch": None}
+    return kw
+
+
+def _blockwise_big_chunks(q, k, v, w):
+    from ..models.blockwise import blockwise_attention
+    s = q.shape[1]
+    qc = 1024 if s % 1024 == 0 else 512
+    kc = 2048 if s % 2048 == 0 else 512
+    return blockwise_attention(q, k, v, window=w, q_chunk=qc, kv_chunk=kc)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *,
+            remat: Optional[bool] = None, extra_opts: Optional[dict] = None,
+            rules_override: Optional[dict] = None,
+            param_rules_override: Optional[dict] = None,
+            cache_policy: str = "heads", preset: str = "baseline",
+            keep_hlo: bool = False, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if preset == "optimized":
+        kw = optimized_overrides(cfg, shape)
+        extra_opts = {**kw.get("extra_opts", {}), **(extra_opts or {})}
+        rules_override = {**kw.get("rules_override", {}),
+                          **(rules_override or {})} or None
+        param_rules_override = {**kw.get("param_rules_override", {}),
+                                **(param_rules_override or {})} or None
+        cache_policy = kw.get("cache_policy", cache_policy)
+        remat = kw.get("remat", remat)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "mode": shape.mode, "preset": preset}
+    if not shape_supported(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = ("pure full-attention arch: long_500k requires "
+                        "sub-quadratic attention (DESIGN.md)")
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    try:
+        fn, args, in_sh = build_lowerable(
+            cfg, shape, mesh, multi_pod, remat=remat,
+            extra_opts=extra_opts, rules_override=rules_override,
+            param_rules_override=param_rules_override,
+            cache_policy=cache_policy)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        if keep_hlo:
+            rec["hlo_text"] = compiled.as_text()
+        cost = compiled.cost_analysis()
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t_lower, 2)
+        rec["compile_s"] = round(t_compile, 2)
+        # raw cost_analysis counts while-loop (lax.scan layer) bodies ONCE
+        rec["xla_flops_scanfolded"] = float(cost.get("flops", 0.0))
+        rec["xla_bytes_scanfolded"] = float(cost.get("bytes accessed", 0.0))
+        # loop-aware analysis of the compiled HLO (per-device numbers)
+        hlo = analyze_hlo(compiled.as_text())
+        rec["flops"] = hlo["flops"]
+        rec["bytes_written"] = hlo["bytes_written"]
+        rec["collectives"] = hlo["collectives"]
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "peak_per_device": int(
+                    (ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                     + ma.output_size_in_bytes) / n_dev),
+            }
+        except Exception as e:  # pragma: no cover
+            rec["memory"] = {"error": str(e)}
+        if verbose:
+            print(f"  cost: flops={rec['flops']:.3e} "
+                  f"bytes={rec['bytes_written']:.3e} "
+                  f"coll={rec['collectives']['total']:.3e}")
+            print(f"  memory: {rec['memory']}")
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--preset", default="baseline",
+                    choices=["baseline", "optimized"])
+    args = ap.parse_args()
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                mesh_name = "multipod" if mp else "pod"
+                tag = f"{arch}_{shape}_{mesh_name}"
+                print(f"[dryrun] {tag}", flush=True)
+                rec = run_one(arch, shape, mp, preset=args.preset,
+                              remat=False if args.no_remat else None)
+                print(f"  -> {rec['status']} ({rec.get('wall_s', 0)}s)"
+                      + (f" {rec.get('error', '')}"
+                         if rec["status"] == "fail" else ""), flush=True)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "fail":
+                    n_fail += 1
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,329 @@
+"""Loop-aware analysis of compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so any
+``lax.scan`` (our layer stacks) under-counts FLOPs/bytes/collectives by
+the trip count.  This module parses the post-optimization HLO, recovers
+trip counts from loop conditions, propagates multipliers through the
+call graph (while bodies, fusions, conditionals), and produces:
+
+- ``flops``: 2*M*N*K summed over dot ops (x multiplier) — the MXU work
+- ``collective_bytes``: per collective kind, operand bytes x multiplier
+- ``bytes_written``: sum of instruction output bytes (HBM write-traffic
+  proxy) x multiplier
+
+These feed the three-term roofline in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f32": 4, "f16": 2, "bf16": 2, "f64": 8, "s32": 4, "u32": 4,
+    "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "c64": 8, "c128": 16, "s4": 1,
+    "u4": 1,
+}
+
+def _comp_header_name(line: str) -> Optional[str]:
+    s = line.strip()
+    if not s.endswith("{") or ") -> " not in s:
+        return None
+    if not (s.startswith("%") or s.startswith("ENTRY")):
+        return None
+    tok = s.split()[1] if s.startswith("ENTRY") else s.split()[0]
+    return tok.lstrip("%").split("(")[0].rstrip()
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(?:\(([^)]*)\)|(\w+)\[([0-9,]*)\][^\s]*)\s*"
+    r"([\w\-]+)\((.*)$")
+_CALLED = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCHDIMS = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+
+def _shape_numel(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n
+
+
+class Instr:
+    __slots__ = ("name", "dtype", "dims", "op", "rest", "tuple_types")
+
+    def __init__(self, name, dtype, dims, op, rest, tuple_types=None):
+        self.name, self.dtype, self.dims = name, dtype, dims
+        self.op, self.rest = op, rest
+        self.tuple_types = tuple_types
+
+    @property
+    def out_bytes(self) -> int:
+        if self.tuple_types is not None:
+            total = 0
+            for t in re.finditer(r"(\w+)\[([0-9,]*)\]", self.tuple_types):
+                total += _DTYPE_BYTES.get(t.group(1), 4) * _shape_numel(
+                    t.group(2))
+            return total
+        return _DTYPE_BYTES.get(self.dtype, 4) * _shape_numel(self.dims or "")
+
+
+def parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            name = _comp_header_name(line)
+            if name is not None:
+                cur = name
+                comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, tup, dtype, dims, op, rest = m.groups()
+            comps[cur].append(Instr(name, dtype, dims, op, rest, tup))
+    return comps
+
+
+def _instr_index(comps):
+    idx = {}
+    for cname, instrs in comps.items():
+        for i in instrs:
+            idx[(cname, i.name)] = i
+    return idx
+
+
+def _trip_count(cond_instrs: List[Instr]) -> int:
+    """Largest integer constant in the loop condition (scan bound)."""
+    best = 1
+    for i in cond_instrs:
+        for m in _CONST_INT.finditer(i.rest or ""):
+            best = max(best, int(m.group(1)))
+        if i.op == "constant" and i.dims == "" and i.rest:
+            m = re.match(r"(\d+)", i.rest.strip(") ,"))
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_REF_KINDS = (
+    ("body", re.compile(r"body=%?([\w\.\-]+)")),
+    ("condition", re.compile(r"condition=%?([\w\.\-]+)")),
+    ("calls", re.compile(r"calls=%?([\w\.\-]+)")),
+    ("to_apply", re.compile(r"to_apply=%?([\w\.\-]+)")),
+)
+
+
+def computation_multipliers(comps: Dict[str, List[Instr]],
+                            entry: Optional[str] = None
+                            ) -> Dict[str, Tuple[float, float]]:
+    """(flops_mult, bytes_mult) per computation.
+
+    While bodies multiply by the trip count; fusion callees (``calls=``)
+    keep the flops multiplier but contribute NO HBM bytes (their
+    instruction outputs live in registers/fused buffers); ``to_apply``
+    reducers contribute neither; conditional branches count once."""
+    all_refs: Dict[str, set] = {}
+    for cname, instrs in comps.items():
+        refs = set()
+        for i in instrs:
+            for kind, rx in _REF_KINDS:
+                for m in rx.finditer(i.rest or ""):
+                    refs.add(m.group(1))
+            b = _BRANCHES.search(i.rest or "")
+            if b:
+                for name in b.group(1).split(","):
+                    refs.add(name.strip().lstrip("%"))
+        all_refs[cname] = refs
+    if entry is None:
+        referenced = set().union(*all_refs.values()) if all_refs else set()
+        entries = [c for c in comps if c not in referenced]
+        mains = [c for c in entries if "main" in c]
+        if mains:
+            entry = mains[0]
+        elif entries:
+            entry = max(entries, key=lambda c: len(comps[c]))
+        else:
+            entry = next(iter(comps))
+    mult: Dict[str, Tuple[float, float]] = {c: (0.0, 0.0) for c in comps}
+    mult[entry] = (1.0, 1.0)
+    for _ in range(len(comps)):
+        changed = False
+        for cname, instrs in comps.items():
+            fbase, bbase = mult.get(cname, (0.0, 0.0))
+            if fbase == 0.0 and bbase == 0.0:
+                continue
+            for i in instrs:
+                trips = 1.0
+                if i.op == "while":
+                    mcond = re.search(r"condition=%?([\w\.\-]+)",
+                                      i.rest or "")
+                    if mcond and mcond.group(1) in comps:
+                        trips = float(_trip_count(comps[mcond.group(1)]))
+                updates: List[Tuple[str, float, float]] = []
+                for kind, rx in _REF_KINDS:
+                    for m in rx.finditer(i.rest or ""):
+                        rname = m.group(1)
+                        if rname not in mult:
+                            continue
+                        if kind in ("body", "condition"):
+                            updates.append((rname, fbase * trips,
+                                            bbase * trips))
+                        elif kind == "calls":
+                            updates.append((rname, fbase, 0.0))
+                        else:  # to_apply: per-element reducer, skip
+                            pass
+                b = _BRANCHES.search(i.rest or "")
+                if b:
+                    for name in b.group(1).split(","):
+                        rname = name.strip().lstrip("%")
+                        if rname in mult:
+                            updates.append((rname, fbase, bbase))
+                for rname, fw, bw in updates:
+                    f0, b0 = mult[rname]
+                    if fw > f0 or bw > b0:
+                        mult[rname] = (max(f0, fw), max(b0, bw))
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _operand_shapes(i: Instr, sym: Dict[str, Tuple[str, str]]):
+    """Shapes of %operand references in order of appearance."""
+    out = []
+    for m in re.finditer(r"%?([\w\.\-]+)", i.rest or ""):
+        if m.group(1) in sym:
+            out.append(sym[m.group(1)])
+    return out
+
+
+def _effective_out_bytes(i: Instr, comps, sym) -> float:
+    """HBM write bytes for one instruction.  dynamic-update-slice (bare
+    or as a fusion root) executes IN PLACE: only the updated slice is
+    written, not the whole buffer — essential for scans that update a
+    (S, ...) buffer once per iteration."""
+    root = i
+    root_sym = sym
+    callee = None
+    if i.op == "fusion":
+        m = re.search(r"calls=%?([\w\.\-]+)", i.rest or "")
+        if m and m.group(1) in comps:
+            callee = comps[m.group(1)]
+            if callee:
+                root = callee[-1]
+                root_sym = {x.name: (x.dtype, x.dims) for x in callee}
+    if root.op == "dynamic-update-slice":
+        ops = _operand_shapes(root, root_sym)
+        if len(ops) >= 2:
+            dtype, dims = ops[1]
+            return _DTYPE_BYTES.get(dtype, 4) * _shape_numel(dims or "")
+    if callee is not None:
+        # fusion containing DUS ops (possibly bitcast/convert-wrapped or
+        # multi-output): the in-place buffers contribute only their
+        # update slices; other non-trivial instrs' outputs stay fused
+        # (no HBM), so the fusion's write = sum of DUS update slices,
+        # or the full output if no DUS is present.
+        dus = [x for x in callee if x.op == "dynamic-update-slice"]
+        if dus:
+            total = 0.0
+            for el in dus:
+                ops = _operand_shapes(el, root_sym)
+                if len(ops) >= 2:
+                    dtype, dims = ops[1]
+                    total += _DTYPE_BYTES.get(dtype, 4) * _shape_numel(
+                        dims or "")
+            if total > 0:
+                return total
+    return i.out_bytes
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps = parse_computations(hlo)
+    mult = computation_multipliers(comps)
+    flops = 0.0
+    bytes_written = 0.0
+    coll: Dict[str, float] = {}
+    for cname, instrs in comps.items():
+        k, kb = mult.get(cname, (0.0, 0.0))
+        if k == 0.0 and kb == 0.0:
+            continue
+        sym = {i.name: (i.dtype, i.dims) for i in instrs}
+        for i in instrs:
+            if i.op not in ("parameter", "constant", "get-tuple-element",
+                            "tuple", "bitcast", "while", "conditional"):
+                # while/conditional outputs alias their body buffers
+                bytes_written += kb * _effective_out_bytes(i, comps, sym)
+            if i.op == "dot":
+                out_numel = _shape_numel(i.dims or "")
+                mc = _CONTRACT.search(i.rest or "")
+                csize = 1
+                if mc:
+                    ops = _operand_shapes(i, sym)
+                    if ops:
+                        lhs_dims = [int(d) for d in ops[0][1].split(",")
+                                    if d.strip()]
+                        for ax in mc.group(1).split(","):
+                            if ax.strip() and int(ax) < len(lhs_dims):
+                                csize *= lhs_dims[int(ax)]
+                flops += k * 2.0 * out_numel * csize
+            elif i.op == "convolution":
+                # rough: 2 * out_numel * (in_ch * kernel_spatial)
+                flops += k * 2.0 * _shape_numel(i.dims or "") * 64
+            elif i.op in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute",
+                          "all-gather-start", "all-reduce-start",
+                          "collective-permute-start"):
+                kind = i.op.replace("-start", "")
+                coll[kind] = coll.get(kind, 0.0) + k * i.out_bytes
+    coll["total"] = sum(v for kk, v in coll.items() if kk != "total")
+    return {"flops": flops, "bytes_written": bytes_written,
+            "collectives": coll,
+            "n_computations": len(comps)}
+
+
+def top_writers(hlo: str, k: int = 15):
+    """Profile helper: top-k (op, computation, bytes x multiplier) HBM
+    writers — the 'where is the memory term coming from' view."""
+    comps = parse_computations(hlo)
+    mult = computation_multipliers(comps)
+    rows = []
+    for cname, instrs in comps.items():
+        _, kb = mult.get(cname, (0.0, 0.0))
+        if kb == 0.0:
+            continue
+        sym = {x.name: (x.dtype, x.dims) for x in instrs}
+        for i in instrs:
+            if i.op in ("parameter", "constant", "get-tuple-element",
+                        "tuple", "bitcast", "while", "conditional"):
+                continue
+            rows.append((kb * _effective_out_bytes(i, comps, sym), i.op,
+                         cname, i.name,
+                         (i.dims or i.tuple_types or "")[:60], kb))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def collective_details(hlo: str, k: int = 10):
+    """Top-k collectives by bytes x multiplier."""
+    comps = parse_computations(hlo)
+    mult = computation_multipliers(comps)
+    rows = []
+    for cname, instrs in comps.items():
+        kf, _ = mult.get(cname, (0.0, 0.0))
+        if kf == 0.0:
+            continue
+        for i in instrs:
+            if i.op.replace("-start", "") in (
+                    "all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute"):
+                rows.append((kf * i.out_bytes, i.op, cname, i.name,
+                             (i.dims or i.tuple_types or "")[:60], kf))
+    rows.sort(reverse=True)
+    return rows[:k]

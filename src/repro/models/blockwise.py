@@ -1,0 +1,134 @@
+"""Memory-efficient full-sequence primitives for long contexts (pure jnp,
+lowered for the dry-run; the Pallas kernels in ``repro.kernels`` are the
+TPU-optimized versions of the same math).
+
+- ``blockwise_attention``: online-softmax attention, scan over q-chunks
+  with an inner scan over kv-chunks.  Never materializes (S, S).
+- ``mlstm_chunked``: chunkwise-parallel mLSTM — quadratic only within a
+  chunk, recurrent (C, n, m) state across chunks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def blockwise_attention(q, k, v, *, window: int = 0, q_chunk: int = 512,
+                        kv_chunk: int = 512):
+    """Causal (optionally sliding-window) GQA attention.
+
+    q: (B, S, H, D) pre-scaled; k, v: (B, S, Kv, D).  Returns (B, S, H, D).
+    """
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qpk = h // kvh
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, s)
+    assert s % q_chunk == 0 and s % kv_chunk == 0
+    nq, nk = s // q_chunk, s // kv_chunk
+
+    # (nq, B, Kv, Q, qc, D) / (nk, B, Kv, kc, D)
+    qr = q.reshape(b, nq, q_chunk, kvh, qpk, d).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(b, nk, kv_chunk, kvh, d).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(b, nk, kv_chunk, kvh, d).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc  # qc: (B, Kv, Q, qchunk, D)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj_kc):
+            m, l, acc = carry
+            kj, kc, vc = kj_kc
+            k_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            scores = jnp.einsum("bkqcd,bked->bkqce", qc, kc).astype(jnp.float32)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            if window:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+            m_new = jnp.maximum(m, scores.max(-1))
+            p = jnp.exp(scores - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            # NOTE: a bf16 p·v (flash-kernel practice) was tried and
+            # REFUTED on the HLO-write instrument: XLA materializes both
+            # the f32 p (for l) and its bf16 copy, so measured traffic
+            # rose 22.3->25.8 s on qwen3 train_4k (EXPERIMENTS.md §Perf)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkqce,bked->bkqcd", p, vc.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, kvh, qpk, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, kvh, qpk, q_chunk), jnp.float32),
+                jnp.zeros((b, kvh, qpk, q_chunk, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qr))
+    # outs: (nq, B, Kv, Q, qc, D) -> (B, S, H, D)
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, d)
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, *, chunk: int = 256,
+                  return_final: bool = False):
+    """Chunkwise-parallel mLSTM (matches ``mlstm_parallel_ref``).
+
+    q,k,v: (B,S,H,D); i_pre,f_pre: (B,S,H).  Returns (B,S,H,D), or
+    ((B,S,H,D), (C, n, m)) when ``return_final`` (prefill -> decode)."""
+    b, s, h, d = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n_chunks = s // chunk
+    scale = d ** -0.5
+
+    def to_chunks(x):
+        return x.reshape(b, n_chunks, chunk, *x.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = to_chunks(q), to_chunks(k), to_chunks(v)
+    ic = to_chunks(i_pre.astype(jnp.float32))
+    lfc = to_chunks(jax.nn.log_sigmoid(f_pre.astype(jnp.float32)))
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, xs):
+        C, n, m = carry                       # (B,H,D,D), (B,H,D), (B,H)
+        qt, kt, vt, it, lft = xs              # (B,L,H,*)
+        cum = jnp.cumsum(lft, axis=1)         # (B,L,H) inclusive
+        g = cum[:, -1]                        # (B,H) total decay
+        # intra-chunk log decay matrix: cum_i - cum_j + i_j for j <= i
+        logd = cum[:, :, None, :] - cum[:, None, :, :] + it[:, None, :, :]
+        logd = jnp.where(tri[None, :, :, None], logd, -jnp.inf)
+        m_intra = jnp.max(logd, axis=2)                       # (B,L,H)
+        m_inter = cum + m[:, None, :]                         # (B,L,H)
+        m_i = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+        dmat = jnp.exp(logd - m_i[:, :, None, :])
+        scores = jnp.einsum("blhd,bjhd->bljh", qt, kt) * scale
+        cmat = scores.astype(jnp.float32) * dmat              # (B,L,L,H)
+        inter_w = jnp.exp(m_inter - m_i)                      # (B,L,H)
+        q32 = qt.astype(jnp.float32) * scale
+        h_inter = jnp.einsum("blhk,bhkv->blhv", q32, C) * inter_w[..., None]
+        n_inter = jnp.einsum("blhk,bhk->blh", q32, n) * inter_w
+        h_intra = jnp.einsum("bljh,bjhv->blhv", cmat, vt.astype(jnp.float32))
+        n_total = jnp.sum(cmat, axis=2) + n_inter
+        denom = jnp.maximum(jnp.abs(n_total), jnp.exp(-m_i))
+        h_out = ((h_intra + h_inter) / denom[..., None]).astype(qt.dtype)
+        # ---- state update
+        m_next = jnp.maximum(g + m, jnp.max(it + g[:, None] - cum, axis=1))
+        decay_state = jnp.exp(g + m - m_next)                 # (B,H)
+        w_in = jnp.exp(it + g[:, None] - cum - m_next[:, None])  # (B,L,H)
+        k32 = kt.astype(jnp.float32)
+        C_new = decay_state[..., None, None] * C + jnp.einsum(
+            "blh,blhk,blhv->bhkv", w_in, k32, vt.astype(jnp.float32))
+        n_new = decay_state[..., None] * n + jnp.einsum(
+            "blh,blhk->bhk", w_in, k32)
+        return (C_new, n_new, m_next), h_out
+
+    init = (jnp.zeros((b, h, d, d), jnp.float32),
+            jnp.zeros((b, h, d), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+    final, hs = jax.lax.scan(step, init, (qc, kc, vc, ic, lfc))
+    out = hs.swapaxes(0, 1).reshape(b, s, h, d)
+    return (out, final) if return_final else out

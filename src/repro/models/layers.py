@@ -1,0 +1,182 @@
+"""Core NN layers: RMSNorm, RoPE, GQA attention (full / sliding-window,
+train / prefill / decode-with-KV-cache).
+
+All functions are pure; params are pytrees from ``params.init_params``.
+Logical axis names used here: vocab, embed, heads, kv_heads, head_dim,
+ffn, mlp, experts, rnn.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import P
+
+# ---------------------------------------------------------------- RMSNorm
+
+def rmsnorm_spec(d: int) -> P:
+    return P((d,), ("embed",), init="ones")
+
+
+def rmsnorm(scale, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------- RoPE
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    ang = ang[..., None, :]                                # (..., S, 1, half)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------- Attention
+
+def attention_spec(cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "wq": P((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": P((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((h, hd, d), ("heads", "head_dim", "embed")),
+        "norm": rmsnorm_spec(d),
+    }
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,H,D) k: (B,L,Kv,D) -> (B, Kv, Q, S, L) with H = Kv*Q."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    q = q.reshape(b, s, kvh, h // kvh, d)
+    return jnp.einsum("bskqd,blkd->bkqsl", q, k)
+
+
+def _gqa_out(probs, v):
+    """probs: (B,Kv,Q,S,L), v: (B,L,Kv,D) -> (B,S,H,D)."""
+    b, kvh, qpk, s, _ = probs.shape
+    out = jnp.einsum("bkqsl,blkd->bskqd", probs, v)
+    return out.reshape(b, s, kvh * qpk, v.shape[-1])
+
+
+_BLOCKWISE_THRESHOLD = 2048
+
+
+def attention(p, x, cfg: ModelConfig, *, window: int = 0,
+              cache: Optional[dict] = None, positions=None, pos=None,
+              attn_fn=None, return_cache: bool = False):
+    """Causal (optionally windowed) GQA attention.
+
+    cache=None  -> full-sequence (train / prefill); returns (y, None).
+                   Sequences >= 2048 use blockwise online-softmax
+                   attention (never materializes S^2).
+    cache=dict  -> single-token decode; x is (B, 1, d); cache holds
+                   k,v of shape (B, L, Kv, D); ``pos`` is the scalar
+                   index the new token is written at (= tokens so far).
+    attn_fn     -> optional fused attention (Pallas flash) used for the
+                   full-sequence path: (q, k, v, window) -> out.
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if positions is None:
+        if pos is not None and jnp.ndim(pos) == 0:
+            positions = jnp.full((b, s), pos, dtype=jnp.int32)
+        elif pos is not None:
+            positions = pos[:, None].astype(jnp.int32)  # per-row pos
+        else:
+            positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    scale = hd ** -0.5
+
+    if cache is None:
+        if attn_fn is not None:
+            out = attn_fn(q * scale, k, v, window)
+        elif s >= _BLOCKWISE_THRESHOLD:
+            from .blockwise import blockwise_attention
+            out = blockwise_attention(q * scale, k, v, window=window)
+        else:
+            scores = _gqa_scores(q * scale, k).astype(jnp.float32)
+            i = jnp.arange(s)[:, None]
+            j = jnp.arange(s)[None, :]
+            mask = j <= i
+            if window:
+                mask &= (i - j) < window
+            scores = jnp.where(mask[None, None, None], scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            out = _gqa_out(probs, v)
+        y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+        if return_cache:
+            return y, {"k": k, "v": v}
+        return y, None
+
+    # ----- decode: write the new k/v at ``pos``, attend over the cache.
+    # pos may be a scalar (dry-run / lockstep serving) or a (B,) array
+    # (continuous batching: every slot at its own position).
+    L = cache["k"].shape[1]
+    if jnp.ndim(pos) == 0:
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        j = jnp.arange(L)
+        mask = (j <= pos)[None]                   # (1, L)
+    else:
+        onehot = jax.nn.one_hot(pos, L, dtype=cache["k"].dtype)  # (B, L)
+        oh = onehot[:, :, None, None]
+        ck = cache["k"] * (1 - oh) + k.astype(cache["k"].dtype) * oh
+        cv = cache["v"] * (1 - oh) + v.astype(cache["v"].dtype) * oh
+        j = jnp.arange(L)[None]
+        mask = j <= pos[:, None]                  # (B, L)
+    scores = _gqa_scores(q * scale, ck).astype(jnp.float32)  # (B,Kv,Q,1,L)
+    if window:
+        wpos = pos if jnp.ndim(pos) else jnp.full((1,), pos)
+        mask = mask & ((wpos[:, None] - j) < window)
+    scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, cv)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+def attn_cache_spec(cfg: ModelConfig, batch: int, length: int, dtype):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, length, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, length, kv, hd), dtype),
+    }
+
+
+# -------------------------------------------------------------- dense FFN
+
+def ffn_spec(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": P((d, f), ("embed", "ffn")),
+        "wi_up": P((d, f), ("embed", "ffn")),
+        "wo": P((f, d), ("ffn", "embed")),
+        "norm": rmsnorm_spec(d),
+    }
+
+
+def ffn(p, x):
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wi_gate"]))
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+    return jnp.einsum("bsf,fd->bsd", g * u, p["wo"])

@@ -1,0 +1,96 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based, capacity-bounded
+dispatch (megablocks-lite style — no (T, E, C) one-hot dispatch tensor, so
+it lowers cheaply at 128-expert scale) and a load-balance aux loss.
+
+Experts are sharded over the "experts" logical axis (expert parallelism);
+the token gather/scatter across that axis lowers to all-to-all-like
+collectives under pjit.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rmsnorm_spec
+from .params import P
+from ..parallelism.context import shard
+
+
+def moe_spec(cfg: ModelConfig):
+    m = cfg.moe
+    d, e, f = cfg.d_model, m.num_experts, m.d_ff_expert
+    return {
+        "norm": rmsnorm_spec(d),
+        "router": P((d, e), ("embed", None), scale=0.1),
+        "wi_gate": P((e, d, f), ("experts", "embed", "ffn")),
+        "wi_up": P((e, d, f), ("experts", "embed", "ffn")),
+        "wo": P((e, f, d), ("experts", "ffn", "embed")),
+    }
+
+
+def moe_capacity(cfg: ModelConfig, tokens_per_row: int) -> int:
+    m = cfg.moe
+    cap = int(math.ceil(tokens_per_row * m.top_k * m.capacity_factor
+                        / m.num_experts))
+    return max(4, (cap + 3) // 4 * 4)
+
+
+def _route_row(p, xrow, cfg: ModelConfig, cap: int):
+    """Sort-based capacity dispatch for ONE batch row.  xrow: (S, d).
+
+    Per-row routing keeps the dispatch local to the data shard under
+    vmap+pjit (no global sort across the sharded batch dim)."""
+    m = cfg.moe
+    s, d = xrow.shape
+    k, e = m.top_k, m.num_experts
+    logits = (xrow @ p["router"]).astype(jnp.float32)        # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, k)                 # (S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch-style)
+    density = jnp.mean(
+        jax.nn.one_hot(top_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(density * jnp.mean(probs, axis=0)) * m.router_aux_weight
+
+    flat_eid = top_idx.reshape(-1)                           # (S*k,)
+    flat_tok = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_eid)
+    s_tok, s_w = flat_tok[order], flat_w[order]
+    group_sizes = jnp.bincount(flat_eid, length=e)           # (E,)
+    starts = jnp.cumsum(group_sizes) - group_sizes
+
+    slot = starts[:, None] + jnp.arange(cap)[None, :]        # (E, C)
+    valid = jnp.arange(cap)[None, :] < group_sizes[:, None]
+    slot = jnp.clip(slot, 0, s * k - 1)
+    tok_of_slot = jnp.where(valid, s_tok[slot], 0)           # (E, C)
+    w_of_slot = jnp.where(valid, s_w[slot], 0.0)
+    xg = jnp.take(xrow, tok_of_slot.reshape(-1), axis=0).reshape(e, cap, d)
+    return xg, tok_of_slot, w_of_slot, aux
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """x: (B, S, d) -> (out, aux_loss).  Dispatch is per batch row
+    (data-parallel safe); expert matmuls shard over the experts axis
+    (expert parallelism -> all-to-all under pjit)."""
+    b, s, d = x.shape
+    cap = moe_capacity(cfg, s)
+    xg, tok_of_slot, w_of_slot, aux = jax.vmap(
+        lambda xr: _route_row(p, xr, cfg, cap))(x)           # (B,E,C,d)
+    xg = shard(xg, "batch", "experts", None, None)
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", xg, p["wi_gate"]))
+    u = jnp.einsum("becd,edf->becf", xg, p["wi_up"])
+    y = jnp.einsum("becf,efd->becd", g * u, p["wo"])         # (B,E,C,d)
+    y = shard(y, "batch", "experts", None, None)
+    y = y * w_of_slot[..., None].astype(y.dtype)
+
+    def combine_row(yr, tok):
+        return jnp.zeros((s, d), yr.dtype).at[tok.reshape(-1)].add(
+            yr.reshape(-1, d), mode="drop")
+
+    out = jax.vmap(combine_row)(y, tok_of_slot)
+    return out, jnp.mean(aux)

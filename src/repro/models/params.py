@@ -1,0 +1,77 @@
+"""Parameter-spec system: single source of truth for shapes, init and
+logical sharding axes.
+
+Modules define a pytree of ``P`` specs; ``init_params`` materializes
+arrays, ``logical_axes`` extracts the axis names, and the parallelism
+layer maps logical axes -> mesh axes to build NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Spec for one parameter tensor."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == ndim
+    init: str = "normal"              # normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} / axes {self.axes} mismatch")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, P)
+
+
+def _materialize(spec: P, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "const":
+        return jnp.full(spec.shape, spec.scale, dtype)
+    if spec.init in ("normal", "embed"):
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(spec_tree, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialize(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(spec_tree, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct tree — no allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def logical_axes(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def param_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return int(sum(int(np.prod(s.shape)) for s in leaves))
+
+
+def stack_specs(spec_tree, n: int, axis_name: Optional[str] = "layers"):
+    """Add a leading 'stacked layers' dim of size n to every spec
+    (params for a scanned group of n pattern-repeats)."""
+    return jax.tree.map(
+        lambda s: P((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale),
+        spec_tree, is_leaf=is_spec)

@@ -1,0 +1,312 @@
+"""Recurrent mixer blocks: RG-LRU (Griffin/RecurrentGemma), mLSTM and
+sLSTM (xLSTM).
+
+Each block exposes ``<block>_spec(cfg)``, a full-sequence apply
+(train/prefill; linear-scan blocks use ``lax.associative_scan``) and a
+single-token decode apply carrying a small recurrent state.  State
+pytrees are created by ``<block>_state_spec``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import rmsnorm_spec
+from .params import P
+
+# ------------------------------------------------------------ causal conv
+
+def conv1d_spec(width: int, channels: int):
+    return {"w": P((width, channels), (None, "rnn"), init="normal", scale=0.5),
+            "b": P((channels,), ("rnn",), init="zeros")}
+
+
+def conv1d(p, x):
+    """Causal depthwise conv, full sequence.  x: (B, S, C)."""
+    w = p["w"]
+    width = w.shape[0]
+    out = x * w[width - 1]
+    for i in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[width - 1 - i]
+    return out + p["b"]
+
+
+def conv1d_step(p, x_t, conv_state):
+    """x_t: (B, C); conv_state: (B, width-1, C) past inputs (oldest first)."""
+    w = p["w"]
+    width = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,width,C)
+    out = jnp.einsum("bwc,wc->bc", window, w) + p["b"]
+    return out, window[:, 1:]
+
+
+# ----------------------------------------------------------------- RG-LRU
+
+_RGLRU_C = 8.0
+
+
+def rglru_block_spec(cfg: ModelConfig):
+    d, r = cfg.d_model, cfg.resolved_d_rnn
+    return {
+        "norm": rmsnorm_spec(d),
+        "w_gelu": P((d, r), ("embed", "rnn")),
+        "w_branch": P((d, r), ("embed", "rnn")),
+        "conv": conv1d_spec(cfg.conv_width, r),
+        "w_rec_gate": P((r, r), ("rnn", "rnn_in")),
+        "w_in_gate": P((r, r), ("rnn", "rnn_in")),
+        "lam": P((r,), ("rnn",), init="const", scale=4.0),  # a=sigmoid(4)≈.982
+        "w_out": P((r, d), ("rnn", "embed")),
+    }
+
+
+def _rglru_coeffs(p, u):
+    """u: (..., r) post-conv branch.  Returns (a, b) of h = a*h_prev + b."""
+    r_gate = jax.nn.sigmoid(u @ p["w_rec_gate"])
+    i_gate = jax.nn.sigmoid(u @ p["w_in_gate"])
+    log_a = -_RGLRU_C * r_gate * jax.nn.softplus(p["lam"])  # log sigmoid(lam)^(c*r)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * (i_gate * u)
+    return a, b
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t over axis 1 (seq), h_0 = 0.  Pure jnp."""
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(p, x, cfg: ModelConfig, state: Optional[dict] = None,
+                scan_fn=None, return_state: bool = False):
+    """Full Griffin recurrent block.  x: (B,S,d).  Returns (y, new_state)."""
+    gelu_branch = jax.nn.gelu(x @ p["w_gelu"])
+    u = x @ p["w_branch"]
+    if state is None:
+        u_raw = u
+        u = conv1d(p["conv"], u)
+        a, b = _rglru_coeffs(p, u)
+        h = (scan_fn or rglru_scan_ref)(a, b)
+        y = (h * gelu_branch) @ p["w_out"]
+        if return_state:
+            w = p["conv"]["w"].shape[0]
+            pad = jnp.pad(u_raw, ((0, 0), (w - 1, 0), (0, 0)))
+            new_state = {"h": h[:, -1].astype(jnp.float32),
+                         "conv": pad[:, -(w - 1):]}
+            return y, new_state
+        return y, None
+    # decode step: x is (B, 1, d)
+    u_t, conv_state = conv1d_step(p["conv"], u[:, 0], state["conv"])
+    a, b = _rglru_coeffs(p, u_t)
+    h = a.astype(jnp.float32) * state["h"] + b.astype(jnp.float32)
+    y = ((h.astype(x.dtype) * gelu_branch[:, 0]) @ p["w_out"])[:, None]
+    return y.astype(x.dtype), {"h": h, "conv": conv_state}
+
+
+def rglru_state_spec(cfg: ModelConfig, batch: int, dtype):
+    r = cfg.resolved_d_rnn
+    return {"h": jax.ShapeDtypeStruct((batch, r), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, r), dtype)}
+
+
+# ------------------------------------------------------------------ mLSTM
+
+def mlstm_block_spec(cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    up = 2 * d
+    dh = up // h
+    return {
+        "norm": rmsnorm_spec(d),
+        "w_up": P((d, up), ("embed", "ffn")),
+        "w_gate": P((d, up), ("embed", "ffn")),
+        "conv": conv1d_spec(cfg.conv_width, up),
+        "wq": P((up, h, dh), ("ffn", "heads", "head_dim")),
+        "wk": P((up, h, dh), ("ffn", "heads", "head_dim")),
+        "wv": P((up, h, dh), ("ffn", "heads", "head_dim")),
+        "wi": P((up, h), ("ffn", "heads"), init="normal", scale=0.1),
+        "bi": P((h,), ("heads",), init="const", scale=-3.0),
+        "wf": P((up, h), ("ffn", "heads"), init="normal", scale=0.1),
+        "bf": P((h,), ("heads",), init="const", scale=3.0),
+        "w_down": P((up, d), ("ffn", "embed")),
+    }
+
+
+def mlstm_parallel_ref(q, k, v, i_pre, f_pre):
+    """Parallel (quadratic) mLSTM form.
+
+    q,k,v: (B,S,H,D); i_pre,f_pre: (B,S,H) pre-activations.
+    Returns h: (B,S,H,D).
+    """
+    b, s, nh, d = q.shape
+    lf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))       # (B,S,H)
+    cum = jnp.cumsum(lf, axis=1)
+    # log decay from j -> i: cum_i - cum_j  (for j <= i)
+    logd = cum[:, :, None, :] - cum[:, None, :, :]           # (B,S_i,S_j,H)
+    logd = logd + i_pre.astype(jnp.float32)[:, None, :, :]   # + i_tilde_j
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logd = jnp.where(mask[None, :, :, None], logd, -jnp.inf)
+    m = jnp.max(logd, axis=2, keepdims=True)                 # (B,S,1,H)
+    m = jnp.maximum(m, -1e30)  # rows with all -inf
+    dmat = jnp.exp(logd - m)
+    scores = jnp.einsum("bihd,bjhd->bijh", q, k) * (d ** -0.5)
+    c = scores.astype(jnp.float32) * dmat
+    n = jnp.maximum(jnp.abs(jnp.sum(c, axis=2)), jnp.exp(-m[:, :, 0]))  # (B,S,H)
+    hout = jnp.einsum("bijh,bjhd->bihd", c, v.astype(jnp.float32))
+    return (hout / n[..., None]).astype(q.dtype)
+
+
+def mlstm_block(p, x, cfg: ModelConfig, state: Optional[dict] = None,
+                parallel_fn=None, return_state: bool = False):
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    up = p["w_up"].shape[1]
+    dh = up // nh
+    xin = x @ p["w_up"]
+    z = x @ p["w_gate"]
+    if state is None:
+        c = jax.nn.silu(conv1d(p["conv"], xin))
+        q = jnp.einsum("bsu,uhd->bshd", c, p["wq"])
+        k = jnp.einsum("bsu,uhd->bshd", c, p["wk"])
+        v = jnp.einsum("bsu,uhd->bshd", xin, p["wv"])
+        i_pre = jnp.einsum("bsu,uh->bsh", c, p["wi"]) + p["bi"]
+        f_pre = jnp.einsum("bsu,uh->bsh", c, p["wf"]) + p["bf"]
+        if return_state:
+            from .blockwise import mlstm_chunked
+            h, (C, n, m) = mlstm_chunked(q, k, v, i_pre, f_pre,
+                                         return_final=True)
+            out = h.reshape(b, s, up) * jax.nn.silu(z)
+            w = p["conv"]["w"].shape[0]
+            pad = jnp.pad(xin, ((0, 0), (w - 1, 0), (0, 0)))
+            return out @ p["w_down"], {"C": C, "n": n, "m": m,
+                                       "conv": pad[:, -(w - 1):]}
+        if parallel_fn is None:
+            if s > 512:
+                from .blockwise import mlstm_chunked
+                parallel_fn = mlstm_chunked
+            else:
+                parallel_fn = mlstm_parallel_ref
+        h = parallel_fn(q, k, v, i_pre, f_pre)
+        out = h.reshape(b, s, up) * jax.nn.silu(z)
+        return out @ p["w_down"], None
+    # ---- decode step
+    c_t, conv_state = conv1d_step(p["conv"], xin[:, 0], state["conv"])
+    c_t = jax.nn.silu(c_t)
+    q = jnp.einsum("bu,uhd->bhd", c_t, p["wq"]) * (dh ** -0.5)
+    k = jnp.einsum("bu,uhd->bhd", c_t, p["wk"])
+    v = jnp.einsum("bu,uhd->bhd", xin[:, 0], p["wv"])
+    i_pre = (c_t @ p["wi"] + p["bi"]).astype(jnp.float32)
+    f_pre = (c_t @ p["wf"] + p["bf"]).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(lf + state["m"], i_pre)
+    fg = jnp.exp(lf + state["m"] - m_new)[..., None]
+    ig = jnp.exp(i_pre - m_new)[..., None]
+    C = fg[..., None] * state["C"] + ig[..., None] * (
+        k[..., :, None].astype(jnp.float32) * v[..., None, :].astype(jnp.float32))
+    n = fg * state["n"] + ig * k.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", C, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q.astype(jnp.float32))),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(b, up).astype(x.dtype)
+    out = (h * jax.nn.silu(z[:, 0])) @ p["w_down"]
+    return out[:, None], {"C": C, "n": n, "m": m_new, "conv": conv_state}
+
+
+def mlstm_state_spec(cfg: ModelConfig, batch: int, dtype):
+    nh = cfg.num_heads
+    up = 2 * cfg.d_model
+    dh = up // nh
+    return {
+        "C": jax.ShapeDtypeStruct((batch, nh, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, nh, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, nh), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, up), dtype),
+    }
+
+
+# ------------------------------------------------------------------ sLSTM
+
+def slstm_block_spec(cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    gate = lambda: P((d, h, dh), ("embed", "heads", "head_dim"), scale=0.5)
+    rec = lambda: P((h, dh, dh), ("heads", "head_dim", "head_dim_in"), scale=0.5)
+    return {
+        "norm": rmsnorm_spec(d),
+        "wz": gate(), "wi": gate(), "wf": gate(), "wo": gate(),
+        "rz": rec(), "ri": rec(), "rf": rec(), "ro": rec(),
+        "bi": P((h, dh), ("heads", "head_dim"), init="const", scale=-3.0),
+        "bf": P((h, dh), ("heads", "head_dim"), init="const", scale=3.0),
+        "w_out": P((d, d), ("embed", "embed_out")),
+    }
+
+
+def _slstm_step(p, carry, gates_t):
+    """carry: (c, n, m, h); gates_t: per-time preactivations (B,H,D,4)."""
+    c, n, m, h = carry
+    zx, ix, fx, ox = [gates_t[..., i] for i in range(4)]
+    z_pre = zx + jnp.einsum("bhd,hed->bhe", h, p["rz"])
+    i_pre = (ix + jnp.einsum("bhd,hed->bhe", h, p["ri"])).astype(jnp.float32)
+    f_pre = (fx + jnp.einsum("bhd,hed->bhe", h, p["rf"])).astype(jnp.float32)
+    o_pre = ox + jnp.einsum("bhd,hed->bhe", h, p["ro"])
+    z = jnp.tanh(z_pre).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(lf + m, i_pre)
+    fg = jnp.exp(lf + m - m_new)
+    ig = jnp.exp(i_pre - m_new)
+    c_new = fg * c + ig * z
+    n_new = jnp.maximum(fg * n + ig, 1e-6)
+    h_new = (jax.nn.sigmoid(o_pre).astype(jnp.float32) * c_new / n_new).astype(h.dtype)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_block(p, x, cfg: ModelConfig, state: Optional[dict] = None,
+                return_state: bool = False, unroll: int = 1,
+                batched_grad: bool = False):
+    b, s, d = x.shape
+    nh = cfg.num_heads
+    dh = d // nh
+    gates = jnp.stack([
+        jnp.einsum("bsd,dhe->bshe", x, p["wz"]),
+        jnp.einsum("bsd,dhe->bshe", x, p["wi"]) + p["bi"],
+        jnp.einsum("bsd,dhe->bshe", x, p["wf"]) + p["bf"],
+        jnp.einsum("bsd,dhe->bshe", x, p["wo"]),
+    ], axis=-1)  # (B,S,H,D,4)
+    if state is None:
+        init = (jnp.zeros((b, nh, dh), jnp.float32),
+                jnp.zeros((b, nh, dh), jnp.float32),
+                jnp.full((b, nh, dh), -1e30, jnp.float32),
+                jnp.zeros((b, nh, dh), x.dtype))
+        if batched_grad:
+            from .slstm_scan import slstm_scan
+            R = {"rz": p["rz"], "ri": p["ri"], "rf": p["rf"],
+                 "ro": p["ro"]}
+            final, hs = slstm_scan(R, jnp.swapaxes(gates, 0, 1), init)
+        else:
+            def step(carry, g_t):
+                new = _slstm_step(p, carry, g_t)
+                return new, new[3]
+            final, hs = jax.lax.scan(step, init, jnp.swapaxes(gates, 0, 1),
+                                     unroll=unroll)
+        h = jnp.swapaxes(hs, 0, 1).reshape(b, s, d)
+        if return_state:
+            return h @ p["w_out"], {"c": final[0], "n": final[1],
+                                    "m": final[2], "h": final[3]}
+        return h @ p["w_out"], None
+    carry = (state["c"], state["n"], state["m"], state["h"])
+    new = _slstm_step(p, carry, gates[:, 0])
+    y = (new[3].reshape(b, d) @ p["w_out"])[:, None]
+    return y, {"c": new[0], "n": new[1], "m": new[2], "h": new[3]}
+
+
+def slstm_state_spec(cfg: ModelConfig, batch: int, dtype):
+    nh = cfg.num_heads
+    dh = cfg.d_model // nh
+    f32 = lambda: jax.ShapeDtypeStruct((batch, nh, dh), jnp.float32)
+    return {"c": f32(), "n": f32(), "m": f32(),
+            "h": jax.ShapeDtypeStruct((batch, nh, dh), dtype)}

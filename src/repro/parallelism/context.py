@@ -1,0 +1,63 @@
+"""Logical-axis partitioning context (flax-partitioning style).
+
+Model code annotates activations with *logical* axis names via
+``shard(x, "batch", "seq", None)``.  The parallelism layer installs a
+rules mapping (logical axis -> mesh axis or None) with ``axis_rules``;
+outside any rules context the calls are no-ops, so model code stays
+mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh():
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: dict, mesh):
+    """rules: {logical_axis_name: mesh_axis | tuple[mesh_axis] | None}"""
+    prev = (current_rules(), current_mesh())
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def spec_for(axes: Sequence[Optional[str]], rules=None) -> PartitionSpec:
+    rules = rules if rules is not None else (current_rules() or {})
+    entries = []
+    used = set()
+    for a in axes:
+        m = rules.get(a) if a is not None else None
+        # one mesh axis may shard only one tensor dim
+        if m is not None:
+            key = tuple(m) if isinstance(m, (list, tuple)) else (m,)
+            if any(k in used for k in key):
+                m = None
+            else:
+                used.update(key)
+        entries.append(tuple(m) if isinstance(m, list) else m)
+    return PartitionSpec(*entries)
+
+
+def shard(x, *axes):
+    """Annotate activation x with logical axes (no-op without rules)."""
+    rules, mesh = current_rules(), current_mesh()
+    if rules is None or mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(axes, rules)))

@@ -1,0 +1,117 @@
+"""GPipe-style pipeline parallelism, TPU-native: ``shard_map`` over a
+"stage" mesh axis, microbatch schedule driven by ``lax.scan``, activations
+handed between stages with ``lax.ppermute``.  Differentiable end-to-end
+(autodiff runs the reverse schedule), so it composes with the normal
+train step.
+
+Layout contract (GPipe.search_space): the model has a single scanned
+layer group whose repeat count is divisible by the stage count; stacked
+layer params are sharded over "stage" along the layer axis, so each
+device holds its stage's contiguous repeats.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec
+
+from ..models.config import ModelConfig
+from ..models.layers import rmsnorm
+from ..models.transformer import _block_apply, embed_inputs, unembed
+from .base import Plan
+
+
+def _stage_fn(cfg: ModelConfig, pattern):
+    """Apply this stage's repeats (r, ...) of the block pattern."""
+
+    def fn(stage_params, x):
+        def body(carry, lp):
+            x_, aux_ = carry
+            for i, kind in enumerate(pattern):
+                x_, _, a = _block_apply(lp[f"pos{i}_{kind}"], x_,
+                                        kind=kind, cfg=cfg)
+                aux_ = aux_ + a
+            return (x_, aux_), None
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   stage_params)
+        return x, aux
+
+    return fn
+
+
+def make_pipelined_blocks(cfg: ModelConfig, plan: Plan, mesh: Mesh):
+    """Returns f(group_params, x_mb) -> (outputs, aux) running the block
+    stack through the pipeline.  x_mb: (M, mb, S, d) microbatched input
+    (replicated); outputs: same shape, valid on all devices."""
+    stages, M = plan.stages, plan.microbatches
+    pattern = cfg.layer_plan()[0][1]
+    stage_fn = _stage_fn(cfg, pattern)
+    perm = [(i, i + 1) for i in range(stages - 1)]
+
+    def body_fn(stage_params, x_mb):
+        stage = jax.lax.axis_index("stage")
+        T = M + stages - 1
+
+        def step(carry, t):
+            recv, outputs, aux = carry
+            first_in = jax.lax.dynamic_index_in_dim(
+                x_mb, jnp.clip(t, 0, M - 1), 0, keepdims=False)
+            my_in = jnp.where(stage == 0, first_in, recv)
+            out, a = stage_fn(stage_params, my_in)
+            m_idx = t - stage
+            valid = (m_idx >= 0) & (m_idx < M)
+            aux = aux + jnp.where(valid, a, 0.0)
+            store_idx = jnp.clip(t - (stages - 1), 0, M - 1)
+            is_store = (stage == stages - 1) & (t >= stages - 1)
+            cur = jax.lax.dynamic_index_in_dim(
+                outputs, store_idx, 0, keepdims=False)
+            outputs = jax.lax.dynamic_update_index_in_dim(
+                outputs, jnp.where(is_store, out, cur), store_idx, 0)
+            nxt = jax.lax.ppermute(out, "stage", perm) if stages > 1 else out
+            return (recv if stages == 1 else nxt, outputs, aux), None
+
+        init = (jnp.zeros_like(x_mb[0]), jnp.zeros_like(x_mb),
+                jnp.zeros((), jnp.float32))
+        (_, outputs, aux), _ = jax.lax.scan(step, init, jnp.arange(T))
+        # broadcast final outputs (held by the last stage) to every stage
+        outputs = jax.lax.psum(
+            jnp.where(stage == stages - 1, outputs, jnp.zeros_like(outputs)),
+            "stage")
+        aux = jax.lax.psum(aux, "stage") / M
+        return outputs, aux
+
+    def stage_param_spec(tree):
+        return jax.tree.map(
+            lambda x: PartitionSpec("stage", *([None] * (x.ndim - 1))), tree)
+
+    def run(group_params, x_mb):
+        in_specs = (stage_param_spec(group_params), PartitionSpec())
+        return jax.shard_map(
+            body_fn, mesh=mesh, in_specs=in_specs,
+            out_specs=(PartitionSpec(), PartitionSpec()),
+            check_vma=False)(group_params, x_mb)
+
+    return run
+
+
+def make_pipeline_loss(cfg: ModelConfig, plan: Plan, mesh: Mesh):
+    """Full-model loss with the block stack pipelined (embedding and
+    unembedding replicated outside the shard_map region)."""
+    M = plan.microbatches
+    blocks = make_pipelined_blocks(cfg, plan, mesh)
+
+    def loss_fn(params, batch):
+        from ..train.steps import _ce_from_logits
+        x = embed_inputs(params, cfg, batch)
+        b, s, d = x.shape
+        assert b % M == 0, f"batch {b} not divisible by microbatches {M}"
+        x_mb = x.reshape(M, b // M, s, d)
+        outs, aux = blocks(params["groups"][0], x_mb)
+        x = outs.reshape(b, s, d)
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = unembed(params, cfg, x)
+        loss, metrics = _ce_from_logits(cfg, logits, batch)
+        metrics["aux_loss"] = aux
+        return loss + aux, metrics
+
+    return loss_fn

@@ -1,0 +1,75 @@
+"""Build NamedShardings for params / opt state / batches from a Plan (or
+from explicit logical->mesh rules for the production dry-run meshes).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from ..models.params import P, is_spec, logical_axes
+from .base import Plan, largest_divisible_axis
+from .context import spec_for
+
+
+def make_mesh_from_plan(plan: Plan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()[: plan.n_devices]
+    import numpy as np
+    devs = np.asarray(devices).reshape(plan.mesh_shape)
+    return Mesh(devs, plan.mesh_axis_names)
+
+
+def param_pspec(spec: P, plan: Plan) -> PartitionSpec:
+    """PartitionSpec for one parameter under the plan's policy."""
+    if plan.param_policy == "replicate":
+        return PartitionSpec()
+    if plan.param_policy == "fsdp":
+        n = dict(plan.mesh_axes)["data"]
+        idx = largest_divisible_axis(spec.shape, n)
+        if idx is None:
+            return PartitionSpec()
+        entries = [None] * len(spec.shape)
+        entries[idx] = "data"
+        return PartitionSpec(*entries)
+    if plan.param_policy == "rules":
+        return spec_for(spec.axes, plan.rules)
+    if plan.param_policy == "stage":
+        # stacked-layer ("layers") axis sharded over the stage axis
+        entries = ["stage" if a == "layers" else None for a in spec.axes]
+        return PartitionSpec(*entries)
+    raise ValueError(plan.param_policy)
+
+
+def param_shardings(spec_tree, plan: Plan, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, param_pspec(s, plan)),
+        spec_tree, is_leaf=is_spec)
+
+
+def param_shardings_from_rules(spec_tree, rules: Dict[str, Optional[str]],
+                               mesh: Mesh):
+    """Production-mesh path: map logical param axes through ``rules``."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for(s.axes, rules)),
+        spec_tree, is_leaf=is_spec)
+
+
+def opt_state_shardings(spec_tree, plan_or_rules, mesh: Mesh):
+    """mu/nu mirror param shardings; step is replicated."""
+    if isinstance(plan_or_rules, Plan):
+        ps = param_shardings(spec_tree, plan_or_rules, mesh)
+    else:
+        ps = param_shardings_from_rules(spec_tree, plan_or_rules, mesh)
+    return {"mu": ps, "nu": ps,
+            "step": NamedSharding(mesh, PartitionSpec())}
+
+
+def batch_shardings(batch_tree, mesh: Mesh, batch_axes) -> dict:
+    """Shard dim 0 (batch) of every input over ``batch_axes``."""
+    def mk(x):
+        nd = x.ndim if hasattr(x, "ndim") else len(x.shape)
+        if nd == 0:
+            return NamedSharding(mesh, PartitionSpec())
+        return NamedSharding(mesh, PartitionSpec(batch_axes))
+    return jax.tree.map(mk, batch_tree)

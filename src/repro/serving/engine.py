@@ -1,0 +1,187 @@
+"""Continuous-batching serving engine.
+
+Token-granularity continuous batching over a fixed pool of batch slots:
+every engine step runs ONE batched `decode_step`; a slot that still has
+unconsumed prompt tokens is fed the next prompt token (inline chunk-1
+prefill), otherwise its last sampled token.  Finished slots are refilled
+from the request queue immediately — no lockstep barriers, exactly the
+Orca/vLLM scheduling idea expressed in JAX (per-slot cache positions via
+the batched-``pos`` decode path; the recurrent-state archs work
+unchanged because their state is position-free).
+
+This is the serving-side counterpart to Saturn's training orchestration
+and what the decode_32k / long_500k dry-run shapes exercise at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.transformer import decode_step, init_decode_state
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    arrival_s: float = 0.0
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    ttft_s: Optional[float] = None
+    done_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    prompt_left: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 512, dtype=jnp.float32,
+                 opts: Optional[dict] = None, eos_id: Optional[int] = None):
+        self.cfg, self.params = cfg, params
+        self.n_slots, self.max_len = slots, max_len
+        self.eos_id = eos_id
+        self.state = init_decode_state(cfg, slots, max_len, dtype=dtype,
+                                       per_row_pos=True)
+        self.slots = [_Slot() for _ in range(slots)]
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.steps = 0
+        opts = opts or {}
+        # exact per-leaf batch axis: diff the state spec at two batch
+        # sizes (a leading layer-stack dim can coincide with `slots`)
+        from ..models.transformer import decode_state_spec
+        s_a = decode_state_spec(cfg, slots, max_len, dtype)
+        s_b = decode_state_spec(cfg, slots + 1, max_len, dtype)
+        self._batch_axis = jax.tree.map(
+            lambda a, b: next((i for i, (x, y) in
+                               enumerate(zip(a.shape, b.shape)) if x != y),
+                              None) if a.shape else None,
+            s_a, s_b)
+        self._batch_axis["pos"] = 0
+        batch_axes = self._batch_axis
+
+        def step_fn(params, tokens, state, active):
+            logits, new_state = decode_step(params, cfg, tokens, state,
+                                            opts=opts)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+            def splice(new, old, ax):
+                # frozen slots keep their previous state
+                if new.ndim == 0 or ax is None:
+                    return new
+                shape = [1] * new.ndim
+                shape[ax] = -1
+                return jnp.where(jnp.reshape(active, shape), new, old)
+
+            spliced = jax.tree.map(splice, new_state, state, batch_axes)
+            return nxt, spliced
+
+        self._step = jax.jit(step_fn)
+
+    # ------------------------------------------------------------ public
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10000) -> List[Request]:
+        """Run until queue + slots drain.  Returns finished requests."""
+        t0 = time.perf_counter()
+        while (self.queue or any(not s.free for s in self.slots)) \
+                and self.steps < max_steps:
+            self._admit()
+            self._engine_step(t0)
+        return self.finished
+
+    def throughput(self) -> Dict[str, float]:
+        toks = sum(len(r.output) for r in self.finished)
+        lat = [r.done_s - r.arrival_s for r in self.finished
+               if r.done_s is not None]
+        ttft = [r.ttft_s for r in self.finished if r.ttft_s is not None]
+        return {"requests": len(self.finished), "tokens": toks,
+                "steps": self.steps,
+                "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+                "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0}
+
+    # ----------------------------------------------------------- private
+    def _admit(self):
+        for b, slot in enumerate(self.slots):
+            if slot.free and self.queue:
+                req = self.queue.pop(0)
+                if len(req.prompt) + req.max_new_tokens > self.max_len:
+                    raise ValueError(f"request {req.rid} exceeds max_len")
+                slot.req = req
+                slot.prompt_left = len(req.prompt)
+                # reset this slot's cache position
+                self.state["pos"] = self.state["pos"].at[b].set(0)
+                self._reset_slot_state(b)
+
+    def _reset_slot_state(self, b: int):
+        """Zero the recurrent states of slot b (KV entries are masked by
+        pos, but recurrent archs carry state that must clear)."""
+        axes = self._batch_axis["layers"]
+
+        def reset(path, leaf, ax):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if leaf.ndim == 0 or ax is None or name in ("k", "v"):
+                return leaf
+            fill = -1e30 if name == "m" else 0
+            idx = tuple([slice(None)] * ax + [b])
+            return leaf.at[idx].set(fill)
+
+        layers = jax.tree_util.tree_map_with_path(
+            reset, self.state["layers"], axes)
+        self.state = {"layers": layers, "pos": self.state["pos"]}
+
+    def _engine_step(self, t0: float):
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        active = np.zeros((self.n_slots,), bool)
+        for b, slot in enumerate(self.slots):
+            if slot.free:
+                continue
+            req = slot.req
+            active[b] = True
+            if slot.prompt_left > 0:
+                idx = len(req.prompt) - slot.prompt_left
+                tokens[b, 0] = req.prompt[idx]
+            else:
+                tokens[b, 0] = req.output[-1]
+        nxt, self.state = self._step(
+            self.params, jnp.asarray(tokens), self.state,
+            jnp.asarray(active))
+        self.steps += 1
+        now = time.perf_counter() - t0
+        nxt = np.asarray(nxt)
+        for b, slot in enumerate(self.slots):
+            if slot.free:
+                continue
+            req = slot.req
+            if slot.prompt_left > 0:
+                slot.prompt_left -= 1
+                if slot.prompt_left == 0:
+                    # this step consumed the last prompt token => its
+                    # output is the first generated token
+                    req.output.append(int(nxt[b]))
+                    req.ttft_s = now
+            else:
+                req.output.append(int(nxt[b]))
+            done = len(req.output) >= req.max_new_tokens or (
+                self.eos_id is not None and req.output
+                and req.output[-1] == self.eos_id)
+            if done:
+                req.done_s = now
+                self.finished.append(req)
+                self.slots[b] = _Slot()

@@ -1,0 +1,186 @@
+"""Parallelism Library registry, Trial Runner, checkpoint store, data
+pipeline, MoE routing properties."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.job import ClusterSpec, Job
+from repro.core.library import ParallelismLibrary
+from repro.core.profiler import HARDWARE, TrialRunner, collective_bytes_from_hlo
+from repro.parallelism.base import Plan, Technique
+
+
+# ------------------------------------------------------ Parallelism Library
+
+class _Custom(Technique):
+    name = "my-custom"
+
+    def search_space(self, cfg, n):
+        return n == 2
+
+    def plan(self, cfg, n):
+        return Plan(self.name, n, (("data", n),), {"batch": "data"})
+
+
+def test_library_register_and_candidates():
+    lib = ParallelismLibrary()
+    assert set(lib.names()) >= {"ddp", "fsdp", "tp", "gpipe", "remat-offload"}
+    lib.register(_Custom())
+    cfg = get_config("xlstm-125m").reduced()
+    cands = lib.candidates(cfg, [1, 2, 4])
+    assert ("my-custom", 2) in cands
+    assert ("my-custom", 4) not in cands
+    assert ("ddp", 1) in cands
+
+
+def test_library_rejects_wrong_interface():
+    lib = ParallelismLibrary()
+    with pytest.raises(TypeError):
+        lib.register(object())
+
+
+def test_library_persistence(tmp_path):
+    lib = ParallelismLibrary()
+    p = str(tmp_path / "lib.json")
+    lib.save(p)
+    lib2 = ParallelismLibrary.load(p)
+    assert set(lib2.names()) == set(lib.names())
+
+
+# ------------------------------------------------------------ Trial Runner
+
+def test_profiler_napkin_monotonic_and_cached(tmp_path):
+    lib = ParallelismLibrary()
+    runner = TrialRunner(lib, HARDWARE["a100"],
+                         cache_path=str(tmp_path / "cache.json"))
+    job = Job("t", get_config("stablelm-12b"), 16, 1024, 100)
+    p1 = runner.profile(job, "fsdp", 2)
+    p8 = runner.profile(job, "fsdp", 8)
+    assert p8.step_time_s < p1.step_time_s, "more GPUs must model faster"
+    assert p8.mem_per_device < p1.mem_per_device
+    # cache: second runner reads the same numbers from disk
+    runner2 = TrialRunner(lib, HARDWARE["a100"],
+                          cache_path=str(tmp_path / "cache.json"))
+    assert runner2.profile(job, "fsdp", 8).step_time_s == p8.step_time_s
+
+
+def test_profiler_empirical_single_device():
+    lib = ParallelismLibrary()
+    runner = TrialRunner(lib, HARDWARE["a100"])
+    job = Job("e", get_config("xlstm-125m").reduced(), 2, 32, 10)
+    prof = runner.profile(job, "ddp", 1, mode="empirical")
+    assert prof.source == "empirical"
+    assert prof.step_time_s > 0
+    assert prof.feasible
+
+
+def test_infeasible_technique_marked():
+    lib = ParallelismLibrary()
+    runner = TrialRunner(lib, HARDWARE["a100"])
+    job = Job("i", get_config("xlstm-125m").reduced(), 2, 32, 10)
+    prof = runner.profile(job, "tp", 7)  # 4 heads % 7 != 0
+    assert not prof.feasible
+
+
+def test_collective_regex_parser():
+    hlo = """
+  %ag = bf16[8,128] all-gather(%x), dimensions={0}
+  %ar = f32[1024] all-reduce(%y), to_apply=%add
+"""
+    out = collective_bytes_from_hlo(hlo)
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["all-reduce"] == 1024 * 4
+    assert out["total"] == out["all-gather"] + out["all-reduce"]
+
+
+# --------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.store import (load_checkpoint, load_metadata,
+                                        save_checkpoint)
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": [jnp.ones(4), {"c": jnp.zeros((2, 2), jnp.bfloat16)}]}
+    path = str(tmp_path / "ck.npz")
+    save_checkpoint(path, tree, {"step": 7})
+    back = load_checkpoint(path, tree)
+    for x, y in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+        assert x.dtype == y.dtype
+    assert load_metadata(path)["step"] == 7
+
+
+# ------------------------------------------------------------------- data
+
+def test_data_deterministic():
+    from repro.data.synthetic import SyntheticLM
+    cfg = get_config("gemma3-4b").reduced()
+    a = list(SyntheticLM(cfg, seed=3).batches(2, 16, num_batches=2))
+    b = list(SyntheticLM(cfg, seed=3).batches(2, 16, num_batches=2))
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    c = next(SyntheticLM(cfg, seed=4).batches(2, 16, num_batches=1))
+    assert not np.array_equal(np.asarray(a[0]["tokens"]),
+                              np.asarray(c["tokens"]))
+
+
+def test_data_learnable_structure():
+    """Bigram structure: next token equals perm[prev] most of the time."""
+    from repro.data.synthetic import SyntheticLM
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    src = SyntheticLM(cfg, seed=0, noise=0.2)
+    b = next(src.batches(4, 128, num_batches=1))
+    toks = np.asarray(b["tokens"])
+    match = np.mean(src._perm[toks[:, :-1]] == toks[:, 1:])
+    assert match > 0.6
+
+
+# -------------------------------------------------------------------- MoE
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_moe_router_weights_and_dropping(seed):
+    """Combine weights are convex per token; dropped tokens only reduce
+    output norm, never corrupt other tokens."""
+    from repro.models.moe import _route_row, moe_capacity
+    cfg = get_config("olmoe-1b-7b").reduced()
+    m = cfg.moe
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    xrow = jax.random.normal(k1, (32, d))
+    p = {"router": jax.random.normal(k2, (d, m.num_experts)) * 0.1}
+    cap = moe_capacity(cfg, 32)
+    xg, tok, w, aux = _route_row(p, xrow, cfg, cap)
+    w = np.asarray(w)
+    assert (w >= 0).all() and w.max() <= 1.0 + 1e-6
+    # every token's total routed weight <= 1 (== 1 unless dropped)
+    tok = np.asarray(tok)
+    sums = np.zeros(32)
+    np.add.at(sums, tok.reshape(-1), w.reshape(-1))
+    assert (sums <= 1.0 + 1e-5).all()
+    assert float(aux) > 0
+
+
+def test_moe_forward_matches_dense_when_one_expert():
+    """With num_experts=1, top_k=1, MoE must equal a plain FFN."""
+    import dataclasses
+    from repro.models.moe import moe_ffn, moe_spec
+    from repro.models.params import init_params
+    cfg0 = get_config("olmoe-1b-7b").reduced()
+    cfg = dataclasses.replace(
+        cfg0, moe=dataclasses.replace(cfg0.moe, num_experts=1, top_k=1,
+                                      capacity_factor=2.0))
+    p = init_params(moe_spec(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    out, aux = moe_ffn(p, x, cfg)
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wi_gate"][0]))
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"][0])
+    dense = jnp.einsum("bsf,fd->bsd", g * u, p["wo"][0])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               atol=1e-5, rtol=1e-5)

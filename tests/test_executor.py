@@ -1,0 +1,102 @@
+"""Simulator + policies: determinism, capacity, introspection wins, and
+the paper's qualitative policy ordering."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.baselines import (CurrentPractice, Optimus, OptimusDynamic,
+                                  RandomPolicy, SaturnPolicy, SaturnStatic)
+from repro.core.executor import simulate
+from repro.core.job import ClusterSpec, Job, hpo_grid
+from repro.core.profiler import Profile
+
+CFG = get_config("xlstm-125m").reduced()
+
+
+def mk_workload(n_jobs=6, seed=0, total_gpus=8):
+    rng = np.random.RandomState(seed)
+    jobs, profiles = [], {}
+    for i in range(n_jobs):
+        j = Job(f"j{i}", CFG, 8, 64, total_steps=int(rng.randint(100, 400)))
+        jobs.append(j)
+        base = rng.uniform(1.0, 4.0)
+        eff = rng.uniform(0.5, 0.95)
+        g = 1
+        while g <= total_gpus:
+            for tech, mult in (("ddp", 1.0), ("fsdp", 1.1), ("gpipe", 1.25)):
+                profiles[(j.name, tech, g)] = Profile(
+                    j.name, tech, g, base * mult / g ** eff, 1e9, True, "t")
+            g *= 2
+    return jobs, profiles
+
+
+CLUSTER = ClusterSpec(nodes=1, gpus_per_node=8, restart_cost_s=10.0)
+
+
+def test_simulation_deterministic():
+    jobs, profiles = mk_workload()
+    r1 = simulate(jobs, SaturnPolicy(time_limit_s=5), profiles, CLUSTER,
+                  introspect_every_s=300)
+    r2 = simulate(jobs, SaturnPolicy(time_limit_s=5), profiles, CLUSTER,
+                  introspect_every_s=300)
+    assert r1.makespan_s == r2.makespan_s
+
+
+def test_gantt_capacity_respected():
+    jobs, profiles = mk_workload(n_jobs=8)
+    res = simulate(jobs, Optimus(), profiles, CLUSTER)
+    events = sorted({g.start_s for g in res.gantt}
+                    | {g.end_s for g in res.gantt})
+    for t in events:
+        used = sum(g.n_gpus for g in res.gantt
+                   if g.kind == "run" and g.start_s <= t < g.end_s - 1e-9)
+        assert used <= CLUSTER.total_gpus
+
+
+def test_all_jobs_complete():
+    jobs, profiles = mk_workload(n_jobs=5, seed=3)
+    for pol in (CurrentPractice(), RandomPolicy(1), Optimus(),
+                OptimusDynamic(), SaturnStatic(time_limit_s=5)):
+        res = simulate(jobs, pol, profiles, CLUSTER,
+                       introspect_every_s=200 if pol.dynamic else None)
+        ran = {g.job for g in res.gantt if g.kind == "run"}
+        assert ran == {j.name for j in jobs}, pol.name
+
+
+def test_saturn_beats_current_practice():
+    """The paper's headline: joint optimization beats one-job-per-node."""
+    jobs, profiles = mk_workload(n_jobs=8, seed=7)
+    base = simulate(jobs, CurrentPractice(), profiles, CLUSTER)
+    sat = simulate(jobs, SaturnPolicy(time_limit_s=10), profiles, CLUSTER,
+                   introspect_every_s=300)
+    assert sat.makespan_s < base.makespan_s
+
+
+def test_introspection_improves_optimus():
+    jobs, profiles = mk_workload(n_jobs=8, seed=11)
+    static = simulate(jobs, Optimus(), profiles, CLUSTER, noise_sigma=0.2)
+    dyn = simulate(jobs, OptimusDynamic(), profiles, CLUSTER,
+                   introspect_every_s=200, noise_sigma=0.2)
+    assert dyn.makespan_s <= static.makespan_s * 1.02
+
+
+def test_restart_penalty_charged():
+    jobs, profiles = mk_workload(n_jobs=6, seed=5)
+    res = simulate(jobs, SaturnPolicy(time_limit_s=5), profiles, CLUSTER,
+                   introspect_every_s=100, noise_sigma=0.3)
+    restarts = [g for g in res.gantt if g.kind == "restart"]
+    assert res.restarts == len(restarts)
+    for g in restarts:
+        assert abs((g.end_s - g.start_s) - CLUSTER.restart_cost_s) < 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100), n_jobs=st.integers(2, 7))
+def test_makespan_lower_bound_property(seed, n_jobs):
+    jobs, profiles = mk_workload(n_jobs=n_jobs, seed=seed)
+    res = simulate(jobs, Optimus(), profiles, CLUSTER, noise_sigma=0.0)
+    # makespan >= the longest single job under its fastest config
+    lb = max(min(p.step_time_s for (jn, _, _g), p in profiles.items()
+                 if jn == j.name) * j.total_steps for j in jobs)
+    assert res.makespan_s >= lb * 0.999

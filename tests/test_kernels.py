@@ -1,0 +1,121 @@
+"""Pallas kernel validation (interpret mode): sweep shapes/dtypes and
+assert_allclose against the pure-jnp oracles in repro.kernels.ref."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_chunk import mlstm_chunk
+from repro.kernels.rglru_scan import rglru_scan
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,h,kv,d,window,bq,bk", [
+    (256, 4, 4, 64, 0, 128, 128),     # MHA
+    (256, 4, 2, 64, 0, 128, 64),      # GQA
+    (512, 8, 1, 32, 0, 128, 128),     # MQA
+    (256, 4, 2, 64, 100, 64, 64),     # sliding window
+    (384, 2, 2, 128, 128, 128, 128),  # window == block
+])
+def test_flash_attention(dtype, s, h, kv, d, window, bq, bk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = (jax.random.normal(ks[0], (2, s, h, d)) * d ** -0.5).astype(dtype)
+    k = jax.random.normal(ks[1], (2, s, kv, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, s, kv, d)).astype(dtype)
+    out = flash_attention(q, k, v, window=window, block_q=bq, block_k=bk,
+                          interpret=True)
+    expected = ref.attention_ref(q.astype(jnp.float32),
+                                 k.astype(jnp.float32),
+                                 v.astype(jnp.float32), window)
+    np.testing.assert_allclose(out.astype(jnp.float32), expected,
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,r,bs,br", [
+    (256, 128, 128, 128),
+    (512, 256, 256, 128),
+    (128, 384, 64, 128),
+])
+def test_rglru_scan(dtype, s, r, bs, br):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    a = (jax.nn.sigmoid(jax.random.normal(k1, (2, s, r))) * 0.2 + 0.8
+         ).astype(dtype)
+    b = (jax.random.normal(k2, (2, s, r)) * 0.1).astype(dtype)
+    out = rglru_scan(a, b, block_s=bs, block_r=br, interpret=True)
+    expected = ref.rglru_scan_ref(a.astype(jnp.float32),
+                                  b.astype(jnp.float32))
+    np.testing.assert_allclose(out.astype(jnp.float32), expected,
+                               atol=_tol(dtype), rtol=1e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,h,d,chunk", [
+    (256, 2, 64, 128),
+    (512, 4, 128, 128),
+    (256, 2, 64, 64),
+])
+def test_mlstm_chunk(dtype, s, h, d, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    q, k, v = [jax.random.normal(kk, (2, s, h, d)).astype(dtype)
+               for kk in ks[:3]]
+    ip = jax.random.normal(ks[3], (2, s, h)).astype(dtype)
+    fp = (jax.random.normal(ks[4], (2, s, h)) * 2 + 2).astype(dtype)
+    out = mlstm_chunk(q, k, v, ip, fp, chunk=chunk, interpret=True)
+    expected = ref.mlstm_ref(*(x.astype(jnp.float32)
+                               for x in (q, k, v, ip, fp)))
+    np.testing.assert_allclose(out.astype(jnp.float32), expected,
+                               atol=5e-2 if dtype == jnp.bfloat16 else 2e-3,
+                               rtol=5e-2)
+
+
+def test_chunked_equals_quadratic_reference():
+    """The chunkwise and quadratic mLSTM forms agree (model-layer oracle
+    self-consistency, feeding both the kernel and the dry-run path)."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    q, k, v = [jax.random.normal(kk, (1, 256, 2, 32)) for kk in ks[:3]]
+    ip = jax.random.normal(ks[3], (1, 256, 2))
+    fp = jax.random.normal(ks[4], (1, 256, 2)) * 2 + 2
+    a = ref.mlstm_ref(q, k, v, ip, fp)
+    b = ref.mlstm_chunked_ref(q, k, v, ip, fp, chunk=64)
+    np.testing.assert_allclose(a, b, atol=2e-3, rtol=2e-3)
+
+
+def test_blockwise_attention_oracle():
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 32)) * 32 ** -0.5
+    k = jax.random.normal(ks[1], (2, 256, 2, 32))
+    v = jax.random.normal(ks[2], (2, 256, 2, 32))
+    for w in (0, 64):
+        np.testing.assert_allclose(
+            ref.blockwise_attention_ref(q, k, v, w),
+            ref.attention_ref(q, k, v, w), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("s,h,d,bs", [
+    (256, 2, 128, 64),
+    (128, 4, 64, 128),
+    (256, 1, 256, 32),
+])
+def test_slstm_step_kernel(dtype, s, h, d, bs):
+    from repro.kernels.slstm_step import slstm_step_scan
+    from repro.models.slstm_scan import slstm_scan
+    ks = jax.random.split(jax.random.PRNGKey(7), 6)
+    gates = (jax.random.normal(ks[0], (2, s, h, d, 4)) * 0.5).astype(dtype)
+    R = {k: (jax.random.normal(kk, (h, d, d)) * 0.05).astype(dtype)
+         for k, kk in zip(["rz", "ri", "rf", "ro"], ks[1:5])}
+    init = (jnp.zeros((2, h, d)), jnp.zeros((2, h, d)),
+            jnp.full((2, h, d), -1e30), jnp.zeros((2, h, d), dtype))
+    _, hs = slstm_scan(R, jnp.swapaxes(gates, 0, 1), init)
+    expected = jnp.swapaxes(hs, 0, 1)
+    out = slstm_step_scan(gates, R["rz"], R["ri"], R["rf"], R["ro"],
+                          block_s=bs, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=1e-5, rtol=1e-4)

@@ -1,0 +1,48 @@
+"""Parallelism-equivalence integration test: spawns a subprocess with 8
+virtual devices (keeps this pytest process at 1 device) and checks every
+technique's one-step result against the single-device baseline."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["h2o-danube-3-4b", "olmoe-1b-7b"])
+def test_techniques_match_single_device(arch):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.testing.parallel_check", arch],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr[-2000:]}"
+    assert "FAIL" not in out.stdout
+
+
+def test_plan_shapes():
+    from repro.configs import get_config
+    from repro.parallelism.techniques import DEFAULT_TECHNIQUES
+    cfg = get_config("h2o-danube-3-4b")
+    for t in DEFAULT_TECHNIQUES:
+        if t.search_space(cfg, 8):
+            plan = t.plan(cfg, 8)
+            import numpy as np
+            assert int(np.prod(plan.mesh_shape)) == 8
+            assert 0 < t.memory_fraction(cfg, 8) <= 1.0
+            assert t.step_overhead() >= 1.0
+
+
+def test_gpipe_search_space_rules():
+    from repro.configs import get_config
+    from repro.parallelism.techniques import GPipe
+    g = GPipe()
+    assert g.search_space(get_config("h2o-danube-3-4b"), 4)   # 24 % 4 == 0
+    assert not g.search_space(get_config("h2o-danube-3-4b"), 5)
+    assert not g.search_space(get_config("gemma3-4b"), 4)  # remainder layers
+    # 26 = 8 pattern repeats + 2 remainder layers -> not pipelineable
+    assert not g.search_space(get_config("recurrentgemma-2b"), 2)
+    assert g.search_space(get_config("qwen3-moe-235b-a22b"), 2)  # 94 % 2

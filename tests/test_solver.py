@@ -1,0 +1,125 @@
+"""Saturn Solver tests: MILP correctness + hypothesis property tests on
+schedule invariants (capacity, completeness, makespan bounds)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.job import ClusterSpec, Job
+from repro.core.profiler import Profile
+from repro.core.solver import (Choice, choices_from_profiles,
+                               greedy_schedule, solve_joint)
+
+CFG = get_config("xlstm-125m").reduced()
+
+
+def mk_job(name, steps=100):
+    return Job(name, CFG, batch_size=8, seq_len=64, total_steps=steps)
+
+
+def mk_profiles(jobs, step_times):
+    """step_times: {(job, tech, g): seconds}."""
+    out = {}
+    for (jn, tech, g), t in step_times.items():
+        out[(jn, tech, g)] = Profile(jn, tech, g, t, 1e9, True, "test")
+    return out
+
+
+def _validate(sol, jobs, total_gpus):
+    names = {a.job for a in sol.assignments}
+    assert names == {j.name for j in jobs}, "every job scheduled exactly once"
+    assert len(sol.assignments) == len(jobs)
+    # capacity at every start/end event
+    events = sorted({a.start_s for a in sol.assignments}
+                    | {a.end_s for a in sol.assignments})
+    for t in events:
+        used = sum(a.n_gpus for a in sol.assignments
+                   if a.start_s <= t < a.end_s - 1e-9)
+        assert used <= total_gpus + 1e-9, f"capacity violated at t={t}"
+    assert sol.makespan_s >= max(a.runtime_s for a in sol.assignments) - 1e-6
+
+
+def test_milp_beats_or_matches_greedy_simple():
+    jobs = [mk_job(f"j{i}") for i in range(4)]
+    st_times = {}
+    for j in jobs:
+        for g in (1, 2, 4, 8):
+            st_times[(j.name, "ddp", g)] = 100.0 / g  # perfect scaling
+    profiles = mk_profiles(jobs, st_times)
+    sol = solve_joint(jobs, profiles, total_gpus=8, n_slots=16)
+    _validate(sol, jobs, 8)
+    choices = {j.name: choices_from_profiles(j, profiles) for j in jobs}
+    g = greedy_schedule(jobs, choices, 8)
+    assert sol.makespan_s <= g.makespan_s + 1e-6
+
+
+def test_joint_choice_matters():
+    """Two jobs, 4 GPUs: job A scales perfectly, job B not at all.  The
+    joint optimum gives B 1 GPU and A 3 (or serializes) — check the MILP
+    does not naively split 2/2."""
+    a, b = mk_job("a", 100), mk_job("b", 100)
+    times = {("a", "tp", g): 120.0 / g for g in (1, 2, 3, 4)}
+    times.update({("b", "ddp", g): 100.0 for g in (1, 2, 3, 4)})
+    profiles = mk_profiles([a, b], times)
+    sol = solve_joint([a, b], profiles, total_gpus=4, n_slots=20)
+    _validate(sol, [a, b], 4)
+    b_assign = next(x for x in sol.assignments if x.job == "b")
+    assert b_assign.n_gpus == 1, "no point giving B more than 1 GPU"
+
+
+def test_infeasible_job_raises():
+    j = mk_job("x")
+    profiles = mk_profiles([j], {})
+    profiles[("x", "ddp", 8)] = Profile("x", "ddp", 8, 1.0, 1e20, False,
+                                        "test")
+    with pytest.raises(ValueError):
+        solve_joint([j], profiles, total_gpus=8)
+
+
+def test_pareto_pruning():
+    j = mk_job("p")
+    profiles = mk_profiles([j], {
+        ("p", "ddp", 1): 10.0,
+        ("p", "ddp", 2): 12.0,   # dominated: more gpus, slower
+        ("p", "fsdp", 2): 6.0,
+        ("p", "tp", 4): 6.0,     # dominated by fsdp@2
+    })
+    ch = choices_from_profiles(j, profiles)
+    got = {(c.technique, c.n_gpus) for c in ch}
+    assert ("ddp", 2) not in got
+    assert ("tp", 4) not in got
+    assert ("ddp", 1) in got and ("fsdp", 2) in got
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_jobs=st.integers(2, 6),
+    total_gpus=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 1000),
+)
+def test_schedule_invariants_random_workloads(n_jobs, total_gpus, seed):
+    rng = np.random.RandomState(seed)
+    jobs = [mk_job(f"r{i}", steps=int(rng.randint(50, 500)))
+            for i in range(n_jobs)]
+    times = {}
+    for j in jobs:
+        base = rng.uniform(0.5, 5.0)
+        eff = rng.uniform(0.4, 1.0)  # scaling efficiency
+        g = 1
+        while g <= total_gpus:
+            times[(j.name, "fsdp", g)] = base / (g ** eff)
+            g *= 2
+    profiles = mk_profiles(jobs, times)
+    sol = solve_joint(jobs, profiles, total_gpus, n_slots=12,
+                      time_limit_s=5.0)
+    _validate(sol, jobs, total_gpus)
+    # lower bounds: max single-job best runtime; total-work / capacity
+    best = {j.name: min(t for (jn, _, g), t in times.items()
+                        if jn == j.name) * j.total_steps for j in jobs}
+    assert sol.makespan_s >= max(best.values()) * 0.999
+    work_lb = sum(min((t * g for (jn, _, g), t in times.items()
+                       if jn == j.name)) * j.total_steps
+                  for j in jobs) / total_gpus
+    assert sol.makespan_s >= work_lb * 0.999

@@ -1,0 +1,113 @@
+"""Node-locality MILP (solve_joint_nodes) + brute-force optimality
+checks for the flat MILP on tiny instances."""
+import itertools
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.job import Job
+from repro.core.profiler import Profile
+from repro.core.solver import solve_joint, solve_joint_nodes
+
+CFG = get_config("xlstm-125m").reduced()
+
+
+def mk(name, steps=100):
+    return Job(name, CFG, 8, 64, steps)
+
+
+def prof(times):
+    return {(j, t, g): Profile(j, t, g, s, 1e9, True, "t")
+            for (j, t, g), s in times.items()}
+
+
+def test_node_locality_prevents_fragmentation():
+    """Three 5-GPU jobs, two 8-GPU nodes: flat pool fits all three
+    concurrently (15<=16); node-local scheduling can only run two."""
+    jobs = [mk(f"j{i}") for i in range(3)]
+    times = {(j.name, "fsdp", 5): 1.0 for j in jobs}
+    p = prof(times)
+    flat = solve_joint(jobs, p, total_gpus=16, n_slots=12)
+    local = solve_joint_nodes(jobs, p, nodes=2, gpus_per_node=8,
+                              n_slots=12)
+    assert flat.makespan_s < 1.3 * 100          # all concurrent
+    assert local.makespan_s >= 1.9 * 100 * 0.9  # two waves
+    # validate node capacity: at any time <= 2 jobs running
+    events = sorted({a.start_s for a in local.assignments})
+    for t in events:
+        running = [a for a in local.assignments
+                   if a.start_s <= t < a.end_s - 1e-9]
+        assert len(running) <= 2
+
+
+def test_whole_node_jobs():
+    """A 16-GPU job must take both nodes; an 8-GPU job one node."""
+    jobs = [mk("big"), mk("small")]
+    p = prof({("big", "fsdp", 16): 1.0, ("small", "ddp", 8): 1.0})
+    sol = solve_joint_nodes(jobs, p, nodes=2, gpus_per_node=8, n_slots=10)
+    big = next(a for a in sol.assignments if a.job == "big")
+    small = next(a for a in sol.assignments if a.job == "small")
+    # they cannot overlap (big takes the whole cluster)
+    assert big.end_s <= small.start_s + 1e-6 or \
+        small.end_s <= big.start_s + 1e-6
+
+
+def test_non_multiple_multi_node_excluded():
+    jobs = [mk("odd")]
+    p = prof({("odd", "tp", 12): 1.0})  # 12 > 8 and 12 % 8 != 0
+    with pytest.raises(ValueError):
+        solve_joint_nodes(jobs, p, nodes=2, gpus_per_node=8)
+
+
+# ---------------------------------------------------- brute-force check
+
+def _brute_force_makespan(jobs, choices, total_gpus):
+    """Exhaustive: every config pick x every permutation, list-scheduled
+    greedily — a true upper bound baseline for tiny instances."""
+    best = math.inf
+    names = [j.name for j in jobs]
+    for picks in itertools.product(*(choices[n] for n in names)):
+        for perm in itertools.permutations(range(len(jobs))):
+            free, t = total_gpus, 0.0
+            running = []  # (end, g)
+            makespan = 0.0
+            ok = True
+            for idx in perm:
+                c = picks[idx]
+                if c.n_gpus > total_gpus:
+                    ok = False
+                    break
+                while c.n_gpus > free:
+                    running.sort()
+                    end, g = running.pop(0)
+                    t = end
+                    free += g
+                running.append((t + c.runtime_s, c.n_gpus))
+                free -= c.n_gpus
+                makespan = max(makespan, t + c.runtime_s)
+            if ok:
+                best = min(best, makespan)
+    return best
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 200))
+def test_milp_near_bruteforce_optimum(seed):
+    rng = np.random.RandomState(seed)
+    jobs = [mk(f"b{i}", steps=100) for i in range(3)]
+    times = {}
+    for j in jobs:
+        base = rng.uniform(0.5, 3.0)
+        for g in (1, 2, 4):
+            times[(j.name, "fsdp", g)] = base / g ** rng.uniform(0.5, 1.0)
+    p = prof(times)
+    from repro.core.solver import choices_from_profiles
+    choices = {j.name: choices_from_profiles(j, p) for j in jobs}
+    bf = _brute_force_makespan(jobs, choices, total_gpus=4)
+    sol = solve_joint(jobs, p, total_gpus=4, n_slots=20, time_limit_s=10)
+    # MILP may beat list-scheduling (true optimum <= bf) but must not be
+    # worse than bf by more than slot-rounding slack
+    assert sol.makespan_s <= bf * 1.12 + 1e-6
