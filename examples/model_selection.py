@@ -2,11 +2,19 @@
 12-job HPO grids) under all five policies on 1- and 2-node clusters.
 
     PYTHONPATH=src python examples/model_selection.py [--nodes 1]
+        [--placement flat|node] [--online] [--arrival-gap 600]
 
 This is the runnable version of benchmarks.run:table2 with a Gantt dump
 so the "unintuitive allocations" the paper describes are visible.
+
+--placement node routes Saturn through the node-locality MILP and makes
+the runtime's NodeAware backend enforce per-node capacity (single-node
+configs never straddle nodes).  --online staggers job arrivals by
+--arrival-gap seconds: the dynamic model-selection scenario the paper's
+introspection mechanism is built for — policies replan as jobs arrive.
 """
 import argparse
+import dataclasses
 import os
 import sys
 
@@ -25,18 +33,29 @@ def main():
     ap.add_argument("--nodes", type=int, default=1)
     ap.add_argument("--workload", default="wikitext",
                     choices=["wikitext", "imagenet"])
+    ap.add_argument("--placement", default="flat", choices=["flat", "node"])
+    ap.add_argument("--online", action="store_true",
+                    help="stagger job arrivals (online model selection)")
+    ap.add_argument("--arrival-gap", type=float, default=600.0,
+                    help="seconds between successive arrivals with --online")
     args = ap.parse_args()
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.run import paper_workloads
     jobs = paper_workloads()[args.workload]
-    cluster = ClusterSpec(nodes=args.nodes, gpus_per_node=8)
+    if args.online:
+        jobs = [dataclasses.replace(j, arrival_s=i * args.arrival_gap)
+                for i, j in enumerate(jobs)]
+    cluster = ClusterSpec(nodes=args.nodes, gpus_per_node=8,
+                          placement=args.placement)
     lib = ParallelismLibrary()
     runner = TrialRunner(lib, HARDWARE["a100"])
     counts = [1, 2, 4, 8] + ([16] if args.nodes == 2 else [])
     profiles = runner.profile_all(jobs, counts, mode="analytic")
 
-    print(f"{args.workload}: {len(jobs)} jobs, {cluster.total_gpus} GPUs")
+    mode = "online" if args.online else "offline"
+    print(f"{args.workload}: {len(jobs)} jobs, {cluster.total_gpus} GPUs, "
+          f"{args.placement} placement, {mode}")
     results = {}
     for pol in (CurrentPractice(), RandomPolicy(0), Optimus(),
                 OptimusDynamic(), SaturnPolicy(time_limit_s=15)):
@@ -44,15 +63,31 @@ def main():
                        introspect_every_s=600 if pol.dynamic else None)
         results[pol.name] = res
         print(f"  {pol.name:18s} {res.makespan_s / 3600:6.2f} h   "
-              f"util={res.utilization(cluster):.2f}")
+              f"util={res.utilization(cluster):.2f} "
+              f"replans={res.replans} restarts={res.restarts}")
 
     sat = results["saturn"]
     print("\nSaturn Gantt (first 12 segments) — note the mixed"
           " parallelisms/allocations:")
     for g in sorted(sat.gantt, key=lambda g: g.start_s)[:12]:
         if g.kind == "run":
+            devs = f" gpus={_ranges(g.devices)}" if g.devices else ""
             print(f"  t={g.start_s / 3600:6.2f}h..{g.end_s / 3600:6.2f}h  "
-                  f"{g.job:26s} {g.technique:>6s} x{g.n_gpus}")
+                  f"{g.job:26s} {g.technique:>6s} x{g.n_gpus}{devs}")
+
+
+def _ranges(devices):
+    """Collapse a device set to 'a-b,c-d' (NodeAware placements need not
+    be contiguous)."""
+    out, run = [], [devices[0], devices[0]]
+    for d in devices[1:]:
+        if d == run[1] + 1:
+            run[1] = d
+        else:
+            out.append(run)
+            run = [d, d]
+    out.append(run)
+    return ",".join(f"{a}-{b}" if a != b else f"{a}" for a, b in out)
 
 
 if __name__ == "__main__":

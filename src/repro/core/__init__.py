@@ -1,3 +1,22 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Saturn's core system: Parallelism Library -> Trial Runner -> joint
+Solver -> event-driven cluster runtime.
+
+Layering (each layer only imports downward):
+
+    schedule.py   Schedule IR: Placement / ScheduleEntry / Schedule, the
+                  Policy interface all planners implement
+    events.py     event types + queue (arrival, completion, restart, tick)
+    placement.py  pluggable device assignment: FlatPool | NodeAware
+    runtime.py    ClusterState + the discrete-event execution engine
+    solver.py     the joint MILPs (flat + node-locality), greedy fallback
+    baselines.py  paper baselines + the Saturn policy (emit Schedule IR)
+    executor.py   simulate() compatibility wrapper + legacy comparator,
+                  LocalRunner for real local execution
+    api.py        SaturnSession facade
+"""
+from .api import SaturnSession                              # noqa: F401
+from .job import ClusterSpec, Job, hpo_grid                 # noqa: F401
+from .placement import FlatPool, NodeAware, make_backend    # noqa: F401
+from .runtime import SimResult, simulate_runtime            # noqa: F401
+from .schedule import (Placement, Policy, Schedule,         # noqa: F401
+                       ScheduleEntry)

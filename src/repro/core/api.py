@@ -3,18 +3,27 @@
     sess = SaturnSession(cluster)
     sess.register_technique(MyTechnique())     # Parallelism Library
     sess.submit(jobs)                          # model selection workload
+    sess.submit(more_jobs, arrival_s=3600.0)   # ...or staggered arrivals
     sess.profile()                             # Trial Runner
-    result = sess.run()                        # Solver + executor
+    result = sess.run()                        # Solver + cluster runtime
+
+Execution goes through the event-driven cluster runtime: placement is
+chosen by ``ClusterSpec.placement`` ("flat" pool or "node"-aware), jobs
+with ``arrival_s > 0`` enter the system online, and dynamic policies
+replan on arrivals and introspection ticks with real restart penalties.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from .baselines import SaturnPolicy
-from .executor import Policy, SimResult, simulate
+from .executor import simulate
 from .job import ClusterSpec, Job
 from .library import ParallelismLibrary
 from .profiler import HARDWARE, HardwareSpec, Profile, TrialRunner
+from .runtime import SimResult
+from .schedule import Policy
 
 
 class SaturnSession:
@@ -32,8 +41,28 @@ class SaturnSession:
         return self.library.register(technique)
 
     # ----------------------------------------------------------- workload
-    def submit(self, jobs):
+    def submit(self, jobs: Sequence[Job],
+               arrival_s: Optional[Union[float, Sequence[float]]] = None):
+        """Add jobs to the workload.
+
+        ``arrival_s`` stamps submission times for online scenarios: a
+        scalar applies to every job in this batch, a sequence gives one
+        arrival per job.  Omitted, each job keeps its own ``arrival_s``
+        (0.0 for offline workloads).
+        """
+        jobs = list(jobs)
+        if arrival_s is not None:
+            if isinstance(arrival_s, (int, float)):
+                arrivals = [float(arrival_s)] * len(jobs)
+            else:
+                arrivals = [float(a) for a in arrival_s]
+                if len(arrivals) != len(jobs):
+                    raise ValueError(
+                        f"{len(arrivals)} arrivals for {len(jobs)} jobs")
+            jobs = [dataclasses.replace(j, arrival_s=a)
+                    for j, a in zip(jobs, arrivals)]
         self.jobs.extend(jobs)
+        return jobs
 
     def gpu_counts(self):
         g = self.cluster.total_gpus
@@ -54,11 +83,21 @@ class SaturnSession:
     # ------------------------------------------------------ Solver + exec
     def run(self, policy: Optional[Policy] = None,
             introspect_every_s: Optional[float] = 600.0,
-            noise_sigma: float = 0.1) -> SimResult:
+            noise_sigma: float = 0.1,
+            placement: Optional[str] = None) -> SimResult:
+        """Solve + execute on the cluster runtime.
+
+        ``placement`` overrides ``cluster.placement`` for this run.
+        """
         if not self.profiles:
             self.profile()
         policy = policy or SaturnPolicy()
-        return simulate(self.jobs, policy, self.profiles, self.cluster,
+        cluster = self.cluster
+        if placement is not None and placement != cluster.placement:
+            # the policy must see the same placement the runtime enforces
+            # (node-aware Saturn switches MILPs on it)
+            cluster = dataclasses.replace(cluster, placement=placement)
+        return simulate(self.jobs, policy, self.profiles, cluster,
                         introspect_every_s=introspect_every_s
                         if policy.dynamic else None,
                         noise_sigma=noise_sigma)

@@ -5,7 +5,11 @@
 - Random: random parallelism, allocation and order (seeded).
 - Optimus (Peng et al., EuroSys'18): greedy marginal-gain GPU allocation.
 - Optimus-Dynamic: Optimus + the introspection mechanism.
-- Saturn: the joint MILP (+ introspection).
+- Saturn: the joint MILP (+ introspection); under a node-aware cluster
+  (``ClusterSpec(placement="node")``) it runs the node-locality MILP
+  and emits node placement hints the runtime honors.
+
+All policies emit Schedule IR (:class:`repro.core.schedule.Schedule`).
 """
 from __future__ import annotations
 
@@ -14,9 +18,10 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from .executor import Policy
 from .job import ClusterSpec, Job
-from .solver import Choice, choices_from_profiles, solve_joint
+from .schedule import Policy, Schedule, ScheduleEntry
+from .solver import (Choice, choices_from_profiles, solve_joint,
+                     solve_joint_nodes)
 
 
 def _feasible(job, profiles, g_range):
@@ -46,7 +51,7 @@ class CurrentPractice(Policy):
     default_technique = "fsdp"
 
     def plan(self, jobs, remaining, profiles, cluster, current):
-        order = []
+        entries = []
         for j in jobs:
             g = cluster.gpus_per_node
             if (j.name, self.default_technique, g) in profiles and \
@@ -61,8 +66,8 @@ class CurrentPractice(Policy):
                     tech, g, _ = min(feas, key=lambda x: x[2])
                 else:
                     tech = best[0]
-            order.append((j.name, tech, g))
-        return order
+            entries.append(ScheduleEntry(j.name, tech, g))
+        return Schedule(entries, solver=self.name)
 
 
 class CurrentPracticeTuned(CurrentPractice):
@@ -73,7 +78,7 @@ class CurrentPracticeTuned(CurrentPractice):
     name = "current-practice-tuned"
 
     def plan(self, jobs, remaining, profiles, cluster, current):
-        order = []
+        entries = []
         for j in jobs:
             g = cluster.gpus_per_node
             best = _best_at_count(j, profiles, g)
@@ -84,8 +89,8 @@ class CurrentPracticeTuned(CurrentPractice):
                 tech, g, _ = min(feas, key=lambda x: x[2])
             else:
                 tech = best[0]
-            order.append((j.name, tech, g))
-        return order
+            entries.append(ScheduleEntry(j.name, tech, g))
+        return Schedule(entries, solver=self.name)
 
 
 class RandomPolicy(Policy):
@@ -103,7 +108,7 @@ class RandomPolicy(Policy):
             tech, g, _ = feas[rng.randint(len(feas))]
             order.append((j.name, tech, g))
         rng.shuffle(order)
-        return order
+        return Schedule.from_tuples(order, solver=self.name)
 
 
 class Optimus(Policy):
@@ -162,7 +167,7 @@ class Optimus(Policy):
             if j.name not in alloc and runtime_at[j.name]:
                 gmin = min(runtime_at[j.name])
                 order.append((j.name, runtime_at[j.name][gmin][0], gmin))
-        return order
+        return Schedule.from_tuples(order, solver=self.name)
 
 
 class OptimusDynamic(Optimus):
@@ -171,8 +176,13 @@ class OptimusDynamic(Optimus):
 
 
 class SaturnPolicy(Policy):
-    """The joint MILP; with ``dynamic`` the simulator re-invokes it at
-    introspection intervals / completions on remaining work."""
+    """The joint MILP; with ``dynamic`` the runtime re-invokes it at
+    introspection intervals / arrivals on observed remaining work.
+
+    On a node-aware cluster (``cluster.placement == "node"``) the plan
+    comes from ``solve_joint_nodes`` and carries node assignments, so
+    the runtime's placement honors node locality end to end.
+    """
 
     name = "saturn"
     dynamic = True
@@ -190,11 +200,17 @@ class SaturnPolicy(Policy):
                 live.append(Job(j.name, j.cfg, j.batch_size, j.seq_len,
                                 rem, j.lr, j.seed))
         if not live:
-            return []
-        sol = solve_joint(live, profiles, cluster.total_gpus,
-                          n_slots=self.n_slots,
-                          time_limit_s=self.time_limit_s, mip_gap=0.05)
-        return [(a.job, a.technique, a.n_gpus) for a in sol.order()]
+            return Schedule([], solver=self.name)
+        if getattr(cluster, "placement", "flat") == "node":
+            sol = solve_joint_nodes(
+                live, profiles, cluster.nodes, cluster.gpus_per_node,
+                n_slots=min(self.n_slots, 16),
+                time_limit_s=self.time_limit_s, mip_gap=0.05)
+        else:
+            sol = solve_joint(live, profiles, cluster.total_gpus,
+                              n_slots=self.n_slots,
+                              time_limit_s=self.time_limit_s, mip_gap=0.05)
+        return sol.to_schedule()
 
 
 class SaturnStatic(SaturnPolicy):

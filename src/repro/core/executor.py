@@ -1,83 +1,27 @@
-"""Cluster execution: an event-driven simulator (drives the paper-table
-benchmark and the introspection mechanism) and a local runner that really
-trains models on this machine for the end-to-end examples.
+"""Cluster execution front-end.
 
-The simulator separates *estimated* step times (what policies see, from
-the Trial Runner) from *true* step times (estimate × seeded noise), so
-dynamic policies (introspection) win for the same reason they do on a
-real cluster: plans based on estimates drift from reality, and re-solving
-with observed remaining work recovers the gap — plus freed-GPU
-reallocation at completion events.
+``simulate()`` is now a thin compatibility wrapper over the event-driven
+cluster runtime (:mod:`.runtime`): Schedule IR plans, pluggable
+placement (flat pool / node-aware), online arrivals, and real preemption
+with restart penalties.  ``simulate_legacy()`` keeps the original
+closed-form while-loop (with its restart-penalty accounting bug fixed)
+as an equivalence comparator for the runtime's flat-pool path.
+
+``LocalRunner`` really trains models on this machine for the end-to-end
+examples; wall-times feed back as profiles.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Callable, Dict, List, Optional, Tuple
-
-import numpy as np
+from typing import Dict, List, Optional, Tuple
 
 from .job import ClusterSpec, Job
 from .profiler import Profile
-
-
-@dataclasses.dataclass
-class GanttEntry:
-    job: str
-    technique: str
-    n_gpus: int
-    start_s: float
-    end_s: float
-    kind: str = "run"          # run | restart
-
-
-@dataclasses.dataclass
-class SimResult:
-    policy: str
-    makespan_s: float
-    gantt: List[GanttEntry]
-    replans: int = 0
-    restarts: int = 0
-
-    def utilization(self, cluster: ClusterSpec) -> float:
-        busy = sum((g.end_s - g.start_s) * g.n_gpus for g in self.gantt
-                   if g.kind == "run")
-        return busy / (self.makespan_s * cluster.total_gpus + 1e-9)
-
-
-class Policy:
-    """Interface: produce an ordered list of (job_name, technique, g).
-
-    The simulator starts jobs in list order whenever GPUs free up
-    (list scheduling).  ``replan`` is invoked at introspection intervals
-    and at completion events if ``dynamic``."""
-
-    name = "policy"
-    dynamic = False           # replan at introspection intervals?
-    replan_on_completion = True   # also replan when a job finishes?
-
-    def plan(self, jobs: List[Job], remaining_steps: Dict[str, int],
-             profiles, cluster: ClusterSpec,
-             current: Dict[str, Tuple[str, int]]) -> List[Tuple[str, str, int]]:
-        raise NotImplementedError
-
-
-@dataclasses.dataclass
-class _Running:
-    job: Job
-    technique: str
-    n_gpus: int
-    start_s: float
-    true_step_s: float
-    steps_at_start: int
-
-
-def _noise_factors(jobs, profiles, seed: int, sigma: float):
-    rng = np.random.RandomState(seed)
-    out = {}
-    for key in profiles:
-        out[key] = float(np.exp(rng.randn() * sigma))
-    return out
+# Re-exports: these types historically lived here; the runtime owns them
+# now but existing callers keep importing from executor.
+from .runtime import (GanttEntry, SimResult, _noise_factors,  # noqa: F401
+                      simulate_runtime)
+from .schedule import Policy, Schedule  # noqa: F401
 
 
 def simulate(jobs: List[Job], policy: Policy,
@@ -85,7 +29,52 @@ def simulate(jobs: List[Job], policy: Policy,
              cluster: ClusterSpec, *,
              introspect_every_s: Optional[float] = None,
              noise_sigma: float = 0.1, noise_seed: int = 0,
-             max_events: int = 100000) -> SimResult:
+             max_events: int = 100000,
+             placement: Optional[str] = None) -> SimResult:
+    """Compatibility wrapper: run on the event-driven runtime.
+
+    ``placement`` overrides ``cluster.placement`` ("flat" keeps the
+    historical single-pool behavior; "node" enforces node locality).
+    """
+    import dataclasses as _dc
+    if placement is not None and \
+            placement != getattr(cluster, "placement", "flat"):
+        # the policy must see the same placement the runtime enforces
+        # (node-aware Saturn switches MILPs on cluster.placement)
+        cluster = _dc.replace(cluster, placement=placement)
+    return simulate_runtime(jobs, policy, profiles, cluster,
+                            introspect_every_s=introspect_every_s,
+                            noise_sigma=noise_sigma, noise_seed=noise_seed,
+                            max_events=max_events)
+
+
+def simulate_legacy(jobs: List[Job], policy: Policy,
+                    profiles: Dict[Tuple[str, str, int], Profile],
+                    cluster: ClusterSpec, *,
+                    introspect_every_s: Optional[float] = None,
+                    noise_sigma: float = 0.1, noise_seed: int = 0,
+                    max_events: int = 100000) -> SimResult:
+    """The original flat-pool while-loop simulator.
+
+    Kept as the reference implementation the runtime must match on
+    offline flat-pool workloads.  The historical restart-penalty bug is
+    fixed here too: a preempted job used to be re-admitted by
+    ``start_fitting()`` at time ``t`` even though a restart Gantt entry
+    through ``t + restart_cost_s`` was just recorded (double-booking the
+    GPUs and understating dynamic policies' preemption cost).  Restarted
+    jobs now only become admissible at ``t + restart_cost_s``.
+    """
+    import dataclasses as _dc
+
+    @_dc.dataclass
+    class _Running:
+        job: Job
+        technique: str
+        n_gpus: int
+        start_s: float
+        true_step_s: float
+        steps_at_start: int
+
     noise = _noise_factors(jobs, profiles, noise_seed, noise_sigma)
 
     def est_step(jname, tech, g):
@@ -97,19 +86,19 @@ def simulate(jobs: List[Job], policy: Policy,
     remaining = {j.name: j.total_steps for j in jobs}
     by_name = {j.name: j for j in jobs}
     waiting = [j.name for j in jobs]
+    restart_ready: Dict[str, float] = {}     # job -> earliest relaunch time
     running: Dict[str, _Running] = {}
     free = cluster.total_gpus
     t = 0.0
     gantt: List[GanttEntry] = []
     replans = restarts = 0
     current_assign: Dict[str, Tuple[str, int]] = {}
-    order: List[Tuple[str, str, int]] = policy.plan(
-        jobs, dict(remaining), profiles, cluster, {})
+    order = Schedule.coerce(policy.plan(
+        jobs, dict(remaining), profiles, cluster, {})).to_tuples()
     replans += 1
     next_introspect = (introspect_every_s if introspect_every_s else math.inf)
 
     def settle(upto_t):
-        """Account finished steps for running jobs up to time upto_t."""
         for name, r in running.items():
             done = int((upto_t - r.start_s) / r.true_step_s)
             remaining[name] = max(0, r.steps_at_start - done)
@@ -120,7 +109,8 @@ def simulate(jobs: List[Job], policy: Policy,
         while started:
             started = False
             for (jname, tech, g) in order:
-                if jname in waiting and g <= free:
+                if jname in waiting and g <= free and \
+                        restart_ready.get(jname, 0.0) <= t + 1e-12:
                     st = true_step(jname, tech, g)
                     running[jname] = _Running(by_name[jname], tech, g, t,
                                               st, remaining[jname])
@@ -134,22 +124,28 @@ def simulate(jobs: List[Job], policy: Policy,
     events = 0
     while (waiting or running) and events < max_events:
         events += 1
-        if not running:
-            raise RuntimeError(
-                f"deadlock: waiting={waiting} free={free} order={order}")
-        next_done_t, next_done = min(
-            ((r.start_s + r.steps_at_start * r.true_step_s, name)
-             for name, r in running.items()), key=lambda x: x[0])
-        if next_introspect < next_done_t - 1e-12:
+        next_wake = min((restart_ready[n] for n in waiting
+                         if restart_ready.get(n, 0.0) > t + 1e-12),
+                        default=math.inf)
+        if running:
+            next_done_t, next_done = min(
+                ((r.start_s + r.steps_at_start * r.true_step_s, name)
+                 for name, r in running.items()), key=lambda x: x[0])
+        else:
+            next_done_t, next_done = math.inf, None
+            if not math.isfinite(next_wake):
+                raise RuntimeError(
+                    f"deadlock: waiting={waiting} free={free} order={order}")
+        if next_introspect < min(next_done_t, next_wake) - 1e-12:
             # ---- introspection point: re-solve on remaining work
             t = next_introspect
             next_introspect += introspect_every_s
             settle(t)
             if policy.dynamic:
                 replans += 1
-                new_order = policy.plan(
+                new_order = Schedule.coerce(policy.plan(
                     jobs, dict(remaining), profiles, cluster,
-                    dict(current_assign))
+                    dict(current_assign))).to_tuples()
                 new_assign = {j: (tech, g) for j, tech, g in new_order}
                 # restart running jobs whose assignment changed
                 for name in list(running):
@@ -159,16 +155,22 @@ def simulate(jobs: List[Job], policy: Policy,
                         free += r.n_gpus
                         gantt.append(GanttEntry(name, r.technique, r.n_gpus,
                                                 r.start_s, t))
-                        # checkpoint + relaunch penalty
+                        # checkpoint + relaunch penalty: blocked until
+                        # t + restart_cost_s
                         gantt.append(GanttEntry(name, "restart", 0, t,
                                                 t + cluster.restart_cost_s,
                                                 kind="restart"))
                         remaining[name] = max(1, remaining[name])
+                        restart_ready[name] = t + cluster.restart_cost_s
                         waiting.append(name)
                         restarts += 1
                 order = new_order
-                # restart penalty: delay those jobs' availability
                 start_fitting()
+            continue
+        if next_wake < next_done_t - 1e-12:
+            # ---- a restarted job becomes admissible again
+            t = next_wake
+            start_fitting()
             continue
         # ---- completion event
         t = next_done_t
@@ -180,8 +182,9 @@ def simulate(jobs: List[Job], policy: Policy,
                                 r.start_s, t))
         if policy.dynamic and policy.replan_on_completion and waiting:
             replans += 1
-            order = policy.plan(jobs, dict(remaining), profiles, cluster,
-                                dict(current_assign))
+            order = Schedule.coerce(policy.plan(
+                jobs, dict(remaining), profiles, cluster,
+                dict(current_assign))).to_tuples()
         start_fitting()
     if events >= max_events:
         raise RuntimeError("simulate: event cap hit")

@@ -22,6 +22,7 @@ class Job:
     total_steps: int
     lr: float = 1e-4
     seed: int = 0
+    arrival_s: float = 0.0          # online workloads: submission time
 
     @property
     def opt_cfg(self) -> AdamWConfig:
@@ -37,6 +38,7 @@ class ClusterSpec:
     gpus_per_node: int = 8
     hbm_per_gpu: float = 40e9       # bytes (A100-40GB on p4d.24xlarge)
     restart_cost_s: float = 30.0    # checkpoint + relaunch penalty
+    placement: str = "flat"         # runtime placement backend: flat | node
 
     @property
     def total_gpus(self) -> int:

@@ -1,0 +1,156 @@
+"""Placement backends: how GPU counts become concrete device sets.
+
+The Schedule IR says *how many* GPUs a job gets; a placement backend
+decides *which* ones, and thereby which co-locations are legal:
+
+- :class:`FlatPool` — the legacy behavior: one undifferentiated pool,
+  any free devices satisfy any request (node boundaries ignored).
+- :class:`NodeAware` — honors what ``solve_joint_nodes`` plans: a
+  single-node config (g <= gpus_per_node) must fit inside ONE node's
+  free capacity; larger configs must be whole-node multiples and take
+  entirely free nodes.  Two 5-GPU jobs can therefore never share one
+  8-GPU node.
+
+Select via ``ClusterSpec(placement="flat"|"node")`` or pass a backend
+to the runtime directly.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+from .schedule import Placement
+
+
+class PlacementError(RuntimeError):
+    """A planned entry can never be hosted by this backend."""
+
+
+class PlacementBackend:
+    kind = "base"
+
+    def __init__(self, total_gpus: int):
+        self.total_gpus = total_gpus
+
+    @property
+    def free_gpus(self) -> int:
+        raise NotImplementedError
+
+    def feasible(self, n_gpus: int) -> bool:
+        """Could a request of this size EVER be placed (empty cluster)?"""
+        raise NotImplementedError
+
+    def allocate(self, n_gpus: int,
+                 preferred_nodes: Optional[Sequence[int]] = None
+                 ) -> Optional[Placement]:
+        """Return a Placement or None if it does not fit right now."""
+        raise NotImplementedError
+
+    def release(self, placement: Placement) -> None:
+        raise NotImplementedError
+
+
+class FlatPool(PlacementBackend):
+    """One big pool of interchangeable GPUs (today's executor model)."""
+
+    kind = "flat"
+
+    def __init__(self, total_gpus: int):
+        super().__init__(total_gpus)
+        self._free = list(range(total_gpus))   # kept sorted
+
+    @property
+    def free_gpus(self) -> int:
+        return len(self._free)
+
+    def feasible(self, n_gpus: int) -> bool:
+        return 0 < n_gpus <= self.total_gpus
+
+    def allocate(self, n_gpus, preferred_nodes=None):
+        if n_gpus > len(self._free):
+            return None
+        devs = tuple(self._free[:n_gpus])
+        del self._free[:n_gpus]
+        return Placement(devs)
+
+    def release(self, placement: Placement) -> None:
+        self._free = sorted(set(self._free) | set(placement.devices))
+
+
+class NodeAware(PlacementBackend):
+    """Per-node capacity: single-node configs best-fit into one node;
+    whole-node-multiple configs take k fully free nodes."""
+
+    kind = "node"
+
+    def __init__(self, nodes: int, gpus_per_node: int):
+        super().__init__(nodes * gpus_per_node)
+        self.nodes = nodes
+        self.gpus_per_node = gpus_per_node
+        self._free: List[List[int]] = [
+            list(range(nu * gpus_per_node, (nu + 1) * gpus_per_node))
+            for nu in range(nodes)]
+
+    @property
+    def free_gpus(self) -> int:
+        return sum(len(f) for f in self._free)
+
+    def feasible(self, n_gpus: int) -> bool:
+        if n_gpus <= 0 or n_gpus > self.total_gpus:
+            return False
+        return (n_gpus <= self.gpus_per_node
+                or n_gpus % self.gpus_per_node == 0)
+
+    def _take(self, nu: int, n: int) -> Tuple[int, ...]:
+        devs = tuple(self._free[nu][:n])
+        del self._free[nu][:n]
+        return devs
+
+    def allocate(self, n_gpus, preferred_nodes=None):
+        if not self.feasible(n_gpus):
+            return None
+        pref = list(preferred_nodes or [])
+        if n_gpus <= self.gpus_per_node:
+            # preferred node first, else best fit (smallest sufficient
+            # free capacity) to limit fragmentation; ties -> lowest id
+            for nu in pref:
+                if 0 <= nu < self.nodes and len(self._free[nu]) >= n_gpus:
+                    return Placement(self._take(nu, n_gpus))
+            cands = [(len(self._free[nu]), nu) for nu in range(self.nodes)
+                     if len(self._free[nu]) >= n_gpus]
+            if not cands:
+                return None
+            _, nu = min(cands)
+            return Placement(self._take(nu, n_gpus))
+        k = n_gpus // self.gpus_per_node
+        empty = [nu for nu in range(self.nodes)
+                 if len(self._free[nu]) == self.gpus_per_node]
+        if len(empty) < k:
+            return None
+        chosen = [nu for nu in pref if nu in empty][:k]
+        for nu in empty:
+            if len(chosen) >= k:
+                break
+            if nu not in chosen:
+                chosen.append(nu)
+        devs: Tuple[int, ...] = ()
+        for nu in sorted(chosen):
+            devs += self._take(nu, self.gpus_per_node)
+        return Placement(devs)
+
+    def release(self, placement: Placement) -> None:
+        for d in placement.devices:
+            nu = d // self.gpus_per_node
+            self._free[nu].append(d)
+        for nu in range(self.nodes):
+            self._free[nu].sort()
+
+
+def make_backend(cluster, kind: Optional[str] = None) -> PlacementBackend:
+    """Build the backend a ClusterSpec asks for (default: its
+    ``placement`` field, falling back to flat)."""
+    kind = kind or getattr(cluster, "placement", "flat")
+    if kind == "flat":
+        return FlatPool(cluster.total_gpus)
+    if kind == "node":
+        return NodeAware(cluster.nodes, cluster.gpus_per_node)
+    raise ValueError(f"unknown placement backend: {kind!r}")

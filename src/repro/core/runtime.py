@@ -1,0 +1,289 @@
+"""ClusterState + event-driven execution engine.
+
+Replaces the monolithic ``simulate()`` while-loop with an explicit
+discrete-event simulation over :mod:`.events`:
+
+- jobs arrive at ``Job.arrival_s`` (online workloads) and policies
+  replan on arrival batches;
+- preempted jobs pay a REAL restart penalty: their GPUs are released at
+  preemption time but the job is only admissible again when its
+  :class:`RestartDone` event fires at ``t + restart_cost_s`` (the legacy
+  loop re-admitted them immediately while also recording a restart
+  Gantt entry — double-booking the GPUs);
+- placement is pluggable (:mod:`.placement`): flat pool or node-aware,
+  so the executor can honor what ``solve_joint_nodes`` plans;
+- every Gantt entry records the concrete device set it occupied, making
+  GPU-second conservation checkable per device.
+
+The simulator separates *estimated* step times (what policies see, from
+the Trial Runner) from *true* step times (estimate x seeded noise), so
+dynamic policies (introspection) win for the same reason they do on a
+real cluster: plans based on estimates drift from reality, and
+re-solving on observed remaining work recovers the gap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .events import (Event, EventQueue, IntrospectionTick, JobArrival,
+                     JobCompletion, RestartDone)
+from .job import ClusterSpec, Job
+from .placement import PlacementBackend, PlacementError, make_backend
+from .profiler import Profile
+from .schedule import Placement, Policy, Schedule, ScheduleEntry
+
+
+@dataclasses.dataclass
+class GanttEntry:
+    job: str
+    technique: str
+    n_gpus: int
+    start_s: float
+    end_s: float
+    kind: str = "run"          # run | restart
+    devices: Tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    makespan_s: float
+    gantt: List[GanttEntry]
+    replans: int = 0
+    restarts: int = 0
+
+    def utilization(self, cluster: ClusterSpec) -> float:
+        busy = sum((g.end_s - g.start_s) * g.n_gpus for g in self.gantt
+                   if g.kind == "run")
+        return busy / (self.makespan_s * cluster.total_gpus + 1e-9)
+
+
+def _noise_factors(jobs, profiles, seed: int, sigma: float):
+    """Seeded multiplicative drift between estimated and true step times.
+    Iterates profiles in insertion order so legacy and runtime paths see
+    identical factors."""
+    rng = np.random.RandomState(seed)
+    out = {}
+    for key in profiles:
+        out[key] = float(np.exp(rng.randn() * sigma))
+    return out
+
+
+@dataclasses.dataclass
+class _Running:
+    job: Job
+    technique: str
+    n_gpus: int
+    placement: Placement
+    start_s: float
+    true_step_s: float
+    steps_at_start: int
+    token: int
+
+
+class ClusterState:
+    """Mutable simulation state: job phases, remaining work, placements,
+    and the Gantt log under construction."""
+
+    def __init__(self, jobs: List[Job], backend: PlacementBackend):
+        self.by_name: Dict[str, Job] = {j.name: j for j in jobs}
+        self.remaining: Dict[str, int] = {j.name: j.total_steps for j in jobs}
+        self.arrived: set = set()
+        self.waiting: List[str] = []
+        self.restarting: set = set()
+        self.running: Dict[str, _Running] = {}
+        self.backend = backend
+        self.gantt: List[GanttEntry] = []
+        self.current_assign: Dict[str, Tuple[str, int]] = {}
+        self.t = 0.0
+
+    def settle(self, upto_t: float) -> None:
+        """Account finished steps for running jobs up to ``upto_t``."""
+        for name, r in self.running.items():
+            done = int((upto_t - r.start_s) / r.true_step_s)
+            self.remaining[name] = max(0, r.steps_at_start - done)
+
+    def live_jobs(self) -> List[Job]:
+        """Arrived, unfinished jobs (running, waiting, or restarting) —
+        what planners plan over."""
+        return [self.by_name[n] for n in self.by_name
+                if n in self.arrived and self.remaining[n] > 0]
+
+    def all_done(self) -> bool:
+        return all(v == 0 for v in self.remaining.values())
+
+
+def simulate_runtime(jobs: List[Job], policy: Policy,
+                     profiles: Dict[Tuple[str, str, int], Profile],
+                     cluster: ClusterSpec, *,
+                     introspect_every_s: Optional[float] = None,
+                     noise_sigma: float = 0.1, noise_seed: int = 0,
+                     max_events: int = 100000,
+                     backend: Optional[PlacementBackend] = None) -> SimResult:
+    """Run ``jobs`` under ``policy`` on the event-driven cluster runtime."""
+    noise = _noise_factors(jobs, profiles, noise_seed, noise_sigma)
+    backend = backend or make_backend(cluster)
+    state = ClusterState(jobs, backend)
+    q = EventQueue()
+    for j in jobs:
+        q.push(JobArrival(max(0.0, getattr(j, "arrival_s", 0.0)), j))
+    if introspect_every_s:
+        q.push(IntrospectionTick(introspect_every_s))
+
+    order = Schedule([])
+    replans = 0
+    restarts = 0
+    launch_tokens = {}            # job -> token of its current launch
+    next_token = [0]
+
+    def est_step(jname, tech, g):
+        return profiles[(jname, tech, g)].step_time_s
+
+    def true_step(jname, tech, g):
+        return est_step(jname, tech, g) * noise[(jname, tech, g)]
+
+    def start_fitting():
+        """List scheduling: repeatedly start the first schedule entry
+        whose job is admissible and whose GPU request fits."""
+        progressed = True
+        while progressed:
+            progressed = False
+            for entry in order.entries:
+                name = entry.job
+                if name not in state.waiting:
+                    continue
+                if not backend.feasible(entry.n_gpus):
+                    raise PlacementError(
+                        f"{name}: {entry.n_gpus} GPUs can never be placed "
+                        f"on backend {backend.kind!r} "
+                        f"({getattr(backend, 'nodes', '?')} nodes x "
+                        f"{getattr(backend, 'gpus_per_node', '?')} GPUs)")
+                pl = backend.allocate(entry.n_gpus,
+                                      preferred_nodes=entry.nodes)
+                if pl is None:
+                    continue
+                st = true_step(name, entry.technique, entry.n_gpus)
+                next_token[0] += 1
+                tok = next_token[0]
+                state.running[name] = _Running(
+                    state.by_name[name], entry.technique, entry.n_gpus,
+                    pl, state.t, st, state.remaining[name], tok)
+                launch_tokens[name] = tok
+                state.current_assign[name] = (entry.technique, entry.n_gpus)
+                state.waiting.remove(name)
+                q.push(JobCompletion(
+                    state.t + state.remaining[name] * st, name, tok))
+                progressed = True
+                break
+
+    def replan(preempt: bool):
+        nonlocal order, replans, restarts
+        live = state.live_jobs()
+        if not live:
+            return
+        order = Schedule.coerce(policy.plan(
+            live, dict(state.remaining), profiles, cluster,
+            dict(state.current_assign)))
+        replans += 1
+        if preempt:
+            new_assign = order.assignment_map()
+            for name in list(state.running):
+                if name in new_assign and \
+                        new_assign[name] != state.current_assign.get(name):
+                    r = state.running.pop(name)
+                    backend.release(r.placement)
+                    state.gantt.append(GanttEntry(
+                        name, r.technique, r.n_gpus, r.start_s, state.t,
+                        devices=r.placement.devices))
+                    # checkpoint + relaunch penalty: the job is only
+                    # admissible again when RestartDone fires
+                    state.gantt.append(GanttEntry(
+                        name, "restart", 0, state.t,
+                        state.t + cluster.restart_cost_s, kind="restart"))
+                    state.remaining[name] = max(1, state.remaining[name])
+                    state.restarting.add(name)
+                    q.push(RestartDone(
+                        state.t + cluster.restart_cost_s, name))
+                    restarts += 1
+
+    events = 0
+    while q:
+        if state.all_done():
+            break
+        ev = q.pop()
+        events += 1
+        if events > max_events:
+            raise RuntimeError("simulate_runtime: event cap hit")
+
+        if isinstance(ev, JobArrival):
+            state.t = ev.t
+            state.settle(ev.t)   # replan must see observed progress
+            batch = [ev] + q.pop_while(JobArrival, ev.t)
+            for e in batch:
+                state.arrived.add(e.job.name)
+                state.waiting.append(e.job.name)
+            # dynamic policies may preempt running jobs to make room for
+            # the new arrival; static ones just extend the plan
+            if state.t > 0 and not getattr(policy, "replan_on_arrival", True):
+                pass
+            else:
+                replan(preempt=policy.dynamic and state.t > 0)
+            start_fitting()
+
+        elif isinstance(ev, JobCompletion):
+            if launch_tokens.get(ev.job) != ev.token or \
+                    ev.job not in state.running:
+                continue                       # stale (preempted launch)
+            state.t = ev.t
+            state.settle(ev.t)
+            r = state.running.pop(ev.job)
+            state.remaining[ev.job] = 0
+            backend.release(r.placement)
+            state.gantt.append(GanttEntry(
+                ev.job, r.technique, r.n_gpus, r.start_s, ev.t,
+                devices=r.placement.devices))
+            if state.all_done():
+                break
+            if policy.dynamic and policy.replan_on_completion and \
+                    state.waiting:
+                replan(preempt=False)
+            start_fitting()
+
+        elif isinstance(ev, RestartDone):
+            state.t = ev.t
+            state.restarting.discard(ev.job)
+            state.waiting.append(ev.job)
+            start_fitting()
+
+        elif isinstance(ev, IntrospectionTick):
+            if state.all_done():
+                continue
+            if not (state.running or state.waiting or state.restarting):
+                # nothing in the system yet (future arrivals pending):
+                # keep the tick chain alive, but there is nothing to
+                # settle or replan
+                q.push(IntrospectionTick(ev.t + introspect_every_s))
+                continue
+            state.t = ev.t
+            state.settle(ev.t)
+            if policy.dynamic:
+                replan(preempt=True)
+            q.push(IntrospectionTick(ev.t + introspect_every_s))
+            start_fitting()
+
+        # deadlock: nothing running, nothing can ever start it
+        if state.waiting and not state.running and not state.restarting \
+                and not q.has_any((JobArrival, RestartDone)):
+            raise RuntimeError(
+                f"deadlock: waiting={state.waiting} "
+                f"free={backend.free_gpus} order={order.to_tuples()}")
+
+    if not state.all_done():
+        unfinished = [n for n, v in state.remaining.items() if v > 0]
+        raise RuntimeError(f"runtime drained with unfinished jobs: "
+                           f"{unfinished}")
+    return SimResult(policy.name, state.t, state.gantt, replans, restarts)

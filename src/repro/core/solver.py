@@ -13,6 +13,12 @@ for HiGHS via ``scipy.optimize.milp`` — same MILP, different solver):
        sum_{j,c} g_c * sum_{t in (tau-d_c, tau]} x[j,c,t] <= G   for all tau
        (t + d_jc) * delta * x[j,c,t] <= M   for all j,c,t
 
+The flat MILP (``solve_joint``) and the node-locality MILP
+(``solve_joint_nodes``) share one constraint builder (:class:`_MilpBuilder`)
+and both emit Schedule IR via :meth:`Solution.to_schedule` — the
+node-aware solution carries per-job node assignments the runtime's
+NodeAware placement backend honors.
+
 A greedy list-scheduling fallback guards against solver timeouts (and is
 also used to compute an upper bound that sizes the horizon).
 """
@@ -22,11 +28,15 @@ import contextlib
 import dataclasses
 import math
 import os
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 from scipy import sparse
 from scipy.optimize import LinearConstraint, milp, Bounds
+
+from .job import Job
+from .profiler import Profile
+from .schedule import Schedule, ScheduleEntry
 
 
 @contextlib.contextmanager
@@ -41,9 +51,6 @@ def _quiet_stdout():
         os.dup2(saved, 1)
         os.close(saved)
         os.close(devnull)
-
-from .job import Job
-from .profiler import Profile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +68,7 @@ class Assignment:
     n_gpus: int
     start_s: float
     runtime_s: float
+    nodes: Optional[Tuple[int, ...]] = None   # node-aware MILP only
 
     @property
     def end_s(self) -> float:
@@ -71,11 +79,82 @@ class Assignment:
 class Solution:
     assignments: List[Assignment]
     makespan_s: float
-    solver: str               # "milp" | "greedy"
+    solver: str               # "milp" | "milp-nodes" | "greedy"
     milp_status: Optional[str] = None
 
     def order(self) -> List[Assignment]:
         return sorted(self.assignments, key=lambda a: (a.start_s, a.job))
+
+    def to_schedule(self) -> Schedule:
+        """Emit Schedule IR: the typed contract the runtime executes."""
+        entries = [ScheduleEntry(a.job, a.technique, a.n_gpus,
+                                 start_s=a.start_s, runtime_s=a.runtime_s,
+                                 nodes=a.nodes)
+                   for a in self.order()]
+        return Schedule(entries, solver=self.solver,
+                        makespan_s=self.makespan_s)
+
+
+# ------------------------------------------------- shared MILP machinery
+
+class _MilpBuilder:
+    """Accumulates sparse linear constraints + runs the HiGHS MILP.
+
+    Both joint formulations are "binary start variables + one continuous
+    makespan var"; this builder owns the shared mechanics (sparse
+    triplets, row bounds, bounds/integrality vectors, solver call) so
+    the two solvers only differ in which constraints they emit.
+    """
+
+    def __init__(self, n_binary: int):
+        self.n_binary = n_binary
+        self.nvar = n_binary + 1          # + makespan, always last
+        self.M_idx = n_binary
+        self._rows: List[int] = []
+        self._cols: List[int] = []
+        self._vals: List[float] = []
+        self._lbs: List[float] = []
+        self._ubs: List[float] = []
+        self._r = 0
+
+    def add(self, terms: Iterable[Tuple[int, float]],
+            lb: float, ub: float) -> None:
+        """One constraint row: lb <= sum coef*x[col] <= ub."""
+        for col, coef in terms:
+            self._rows.append(self._r)
+            self._cols.append(col)
+            self._vals.append(coef)
+        self._lbs.append(lb)
+        self._ubs.append(ub)
+        self._r += 1
+
+    def add_makespan(self, var: int, end_s: float) -> None:
+        """end_s * x[var] - M <= 0."""
+        self.add([(var, end_s), (self.M_idx, -1.0)], -np.inf, 0.0)
+
+    def solve(self, cvec: np.ndarray, *, time_limit_s: float,
+              mip_gap: float):
+        """Run HiGHS; returns the scipy result or None on failure."""
+        A = sparse.coo_matrix(
+            (self._vals, (self._rows, self._cols)),
+            shape=(self._r, self.nvar)).tocsc()
+        cons = LinearConstraint(A, np.array(self._lbs), np.array(self._ubs))
+        integrality = np.ones(self.nvar)
+        integrality[self.M_idx] = 0
+        bounds = Bounds(np.zeros(self.nvar),
+                        np.concatenate([np.ones(self.n_binary), [np.inf]]))
+        try:
+            with _quiet_stdout():
+                res = milp(c=cvec, constraints=cons,
+                           integrality=integrality, bounds=bounds,
+                           options={"time_limit": time_limit_s,
+                                    "mip_rel_gap": mip_gap,
+                                    "presolve": True})
+        except Exception:
+            return None
+        if not res.success or res.x is None:
+            return None
+        return res
 
 
 def choices_from_profiles(job: Job, profiles: Dict[Tuple[str, str, int], Profile],
@@ -161,6 +240,7 @@ def solve_joint(jobs: List[Job],
     # variable layout: x[j, c, t] flattened, then M last
     index: List[Tuple[int, Choice, int]] = []   # (job_idx, choice, slot)
     var_of: Dict[Tuple[int, int, int], int] = {}
+    dur_of: Dict[int, int] = {}
     for ji, j in enumerate(jobs):
         for ci, c in enumerate(choice_map[j.name]):
             dur = max(1, math.ceil(c.runtime_s / delta - 1e-9))
@@ -168,65 +248,33 @@ def solve_joint(jobs: List[Job],
                 continue
             for t in range(n_slots - dur + 1):
                 var_of[(ji, ci, t)] = len(index)
+                dur_of[len(index)] = dur
                 index.append((ji, c, t))
     nx = len(index)
-    nvar = nx + 1  # + makespan
-    M_idx = nx
 
-    rows, cols, vals = [], [], []
-    lbs, ubs = [], []
-    r = 0
+    b = _MilpBuilder(nx)
     # (1) each job picks exactly one (choice, start)
     for ji in range(len(jobs)):
-        for (ji2, ci, t), vi in var_of.items():
-            if ji2 == ji:
-                rows.append(r), cols.append(vi), vals.append(1.0)
-        lbs.append(1.0), ubs.append(1.0)
-        r += 1
+        b.add([(vi, 1.0) for (ji2, ci, t), vi in var_of.items()
+               if ji2 == ji], 1.0, 1.0)
     # (2) capacity per slot
-    dur_of = {}
-    for (ji, ci, t), vi in var_of.items():
-        c = choice_map[jobs[ji].name][ci]
-        dur_of[vi] = max(1, math.ceil(c.runtime_s / delta - 1e-9))
     for tau in range(n_slots):
-        any_entry = False
-        for (ji, ci, t), vi in var_of.items():
-            c = choice_map[jobs[ji].name][ci]
-            if t <= tau < t + dur_of[vi]:
-                rows.append(r), cols.append(vi), vals.append(float(c.n_gpus))
-                any_entry = True
-        if any_entry:
-            lbs.append(-np.inf), ubs.append(float(total_gpus))
-            r += 1
+        terms = [(vi, float(choice_map[jobs[ji].name][ci].n_gpus))
+                 for (ji, ci, t), vi in var_of.items()
+                 if t <= tau < t + dur_of[vi]]
+        if terms:
+            b.add(terms, -np.inf, float(total_gpus))
     # (3) makespan: (t + dur)*delta * x - M <= 0
     for (ji, ci, t), vi in var_of.items():
-        end = (t + dur_of[vi]) * delta
-        rows.append(r), cols.append(vi), vals.append(end)
-        rows.append(r), cols.append(M_idx), vals.append(-1.0)
-        lbs.append(-np.inf), ubs.append(0.0)
-        r += 1
+        b.add_makespan(vi, (t + dur_of[vi]) * delta)
 
-    A = sparse.coo_matrix((vals, (rows, cols)), shape=(r, nvar)).tocsc()
-    cons = LinearConstraint(A, np.array(lbs), np.array(ubs))
-    cvec = np.zeros(nvar)
-    cvec[M_idx] = 1.0
+    cvec = np.zeros(b.nvar)
+    cvec[b.M_idx] = 1.0
     eps = delta * 1e-4
     for key, vi in var_of.items():
         cvec[vi] = eps * key[2]
-    integrality = np.ones(nvar)
-    integrality[M_idx] = 0
-    bounds = Bounds(np.zeros(nvar),
-                    np.concatenate([np.ones(nx), [np.inf]]))
-    try:
-        with _quiet_stdout():
-            res = milp(c=cvec, constraints=cons, integrality=integrality,
-                       bounds=bounds,
-                       options={"time_limit": time_limit_s,
-                                "mip_rel_gap": mip_gap,
-                                "presolve": True})
-    except Exception:
-        return ub
-    if not res.success or res.x is None:
+    res = b.solve(cvec, time_limit_s=time_limit_s, mip_gap=mip_gap)
+    if res is None:
         return ub
     x = res.x
     key_of = {vi: key for key, vi in var_of.items()}
@@ -260,7 +308,9 @@ def solve_joint_nodes(jobs: List[Job],
     larger configs must be whole-node multiples (you allocate whole
     p4d/ICI-slice nodes) and pick which nodes via binaries y[j,c,t,nu].
     Per-(node, slot) capacity replaces the flat pool constraint, so two
-    5-GPU jobs can NOT share a single 8-GPU node with a third.
+    5-GPU jobs can NOT share a single 8-GPU node with a third.  The
+    solution's assignments carry the chosen node sets, which the
+    runtime's NodeAware placement backend uses as placement hints.
     """
     G = nodes * gpus_per_node
     choice_map = {j.name: choices_from_profiles(j, profiles) for j in jobs}
@@ -325,22 +375,15 @@ def _solve_nodes_once(jobs, choice_map, nodes, gpus_per_node, *,
                     for nu in range(nodes):
                         add(("y", ji, ci, t, nu))
     nx = len(xvars)
-    M_idx = nx
-    nvar = nx + 1
 
-    rows, cols, vals, lbs, ubs = [], [], [], [], []
-    r = 0
+    b = _MilpBuilder(nx)
     # (1) one (choice, start[, node-set]) per job
     for ji in range(len(jobs)):
-        found = False
-        for key, vi in var_of.items():
-            if key[0] in ("x1", "xm") and key[1] == ji:
-                rows.append(r), cols.append(vi), vals.append(1.0)
-                found = True
-        if not found:
+        terms = [(vi, 1.0) for key, vi in var_of.items()
+                 if key[0] in ("x1", "xm") and key[1] == ji]
+        if not terms:
             return None
-        lbs.append(1.0), ubs.append(1.0)
-        r += 1
+        b.add(terms, 1.0, 1.0)
     # (2) whole-node jobs: sum_nu y == k * x
     for key, vi in var_of.items():
         if key[0] != "xm":
@@ -348,64 +391,39 @@ def _solve_nodes_once(jobs, choice_map, nodes, gpus_per_node, *,
         _, ji, ci, t, _ = key
         c = choice_map[jobs[ji].name][ci]
         k = c.n_gpus // gpus_per_node
-        rows.append(r), cols.append(vi), vals.append(-float(k))
+        terms = [(vi, -float(k))]
         for nu in range(nodes):
-            yv = var_of[("y", ji, ci, t, nu)]
-            rows.append(r), cols.append(yv), vals.append(1.0)
-        lbs.append(0.0), ubs.append(0.0)
-        r += 1
+            terms.append((var_of[("y", ji, ci, t, nu)], 1.0))
+        b.add(terms, 0.0, 0.0)
     # (3) per-(node, slot) capacity
     for nu in range(nodes):
         for tau in range(n_slots):
-            any_e = False
+            terms = []
             for key, vi in var_of.items():
                 kind, ji, ci, t = key[0], key[1], key[2], key[3]
                 if kind == "x1" and key[4] == nu:
                     c = choice_map[jobs[ji].name][ci]
                     if t <= tau < t + dur_of[(ji, ci)]:
-                        rows.append(r), cols.append(vi)
-                        vals.append(float(c.n_gpus))
-                        any_e = True
+                        terms.append((vi, float(c.n_gpus)))
                 elif kind == "y" and key[4] == nu:
                     if t <= tau < t + dur_of[(ji, ci)]:
-                        rows.append(r), cols.append(vi)
-                        vals.append(float(gpus_per_node))
-                        any_e = True
-            if any_e:
-                lbs.append(-np.inf), ubs.append(float(gpus_per_node))
-                r += 1
+                        terms.append((vi, float(gpus_per_node)))
+            if terms:
+                b.add(terms, -np.inf, float(gpus_per_node))
     # (4) makespan
     for key, vi in var_of.items():
         if key[0] not in ("x1", "xm"):
             continue
         _, ji, ci, t = key[0], key[1], key[2], key[3]
-        end = (t + dur_of[(ji, ci)]) * delta
-        rows.append(r), cols.append(vi), vals.append(end)
-        rows.append(r), cols.append(M_idx), vals.append(-1.0)
-        lbs.append(-np.inf), ubs.append(0.0)
-        r += 1
+        b.add_makespan(vi, (t + dur_of[(ji, ci)]) * delta)
 
-    A = sparse.coo_matrix((vals, (rows, cols)), shape=(r, nvar)).tocsc()
-    cvec = np.zeros(nvar)
-    cvec[M_idx] = 1.0
+    cvec = np.zeros(b.nvar)
+    cvec[b.M_idx] = 1.0
     for key, vi in var_of.items():
         if key[0] in ("x1", "xm"):
             cvec[vi] = delta * 1e-4 * key[3]
-    integrality = np.ones(nvar)
-    integrality[M_idx] = 0
-    bounds = Bounds(np.zeros(nvar),
-                    np.concatenate([np.ones(nx), [np.inf]]))
-    try:
-        with _quiet_stdout():
-            res = milp(c=cvec,
-                       constraints=LinearConstraint(A, np.array(lbs),
-                                                    np.array(ubs)),
-                       integrality=integrality, bounds=bounds,
-                       options={"time_limit": time_limit_s,
-                                "mip_rel_gap": mip_gap, "presolve": True})
-    except Exception:
-        return None
-    if not res.success or res.x is None:
+    res = b.solve(cvec, time_limit_s=time_limit_s, mip_gap=mip_gap)
+    if res is None:
         return None
     x = res.x
     assignments = []
@@ -417,10 +435,17 @@ def _solve_nodes_once(jobs, choice_map, nodes, gpus_per_node, *,
                 break
         if pick is None:
             return None
-        ci, t = pick[2], pick[3]
+        kind, _, ci, t, nu = pick
         c = choice_map[j.name][ci]
+        if kind == "x1":
+            node_set: Tuple[int, ...] = (nu,)
+        else:
+            node_set = tuple(sorted(
+                n2 for n2 in range(nodes)
+                if x[var_of[("y", ji, ci, t, n2)]] > 0.5))
         assignments.append(Assignment(j.name, c.technique, c.n_gpus,
-                                      t * delta, c.runtime_s))
+                                      t * delta, c.runtime_s,
+                                      nodes=node_set))
     makespan = max(a.end_s for a in assignments)
     return Solution(assignments, makespan, "milp-nodes",
                     milp_status=res.message)

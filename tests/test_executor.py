@@ -2,7 +2,7 @@
 the paper's qualitative policy ordering."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.baselines import (CurrentPractice, Optimus, OptimusDynamic,

@@ -1,0 +1,369 @@
+"""Event-driven cluster runtime: node-aware placement, online arrivals,
+restart GPU-second conservation, and legacy-wrapper equivalence."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.baselines import (CurrentPractice, Optimus, OptimusDynamic,
+                                  RandomPolicy, SaturnPolicy)
+from repro.core.executor import simulate, simulate_legacy
+from repro.core.job import ClusterSpec, Job
+from repro.core.placement import FlatPool, NodeAware, PlacementError
+from repro.core.profiler import Profile
+from repro.core.runtime import simulate_runtime
+from repro.core.schedule import Placement, Schedule, ScheduleEntry
+from repro.core.solver import solve_joint_nodes
+
+CFG = get_config("xlstm-125m").reduced()
+
+
+def mk_workload(n_jobs=6, seed=0, total_gpus=8, extra_counts=()):
+    rng = np.random.RandomState(seed)
+    jobs, profiles = [], {}
+    for i in range(n_jobs):
+        j = Job(f"j{i}", CFG, 8, 64, total_steps=int(rng.randint(100, 400)))
+        jobs.append(j)
+        base = rng.uniform(1.0, 4.0)
+        eff = rng.uniform(0.5, 0.95)
+        counts = []
+        g = 1
+        while g <= total_gpus:
+            counts.append(g)
+            g *= 2
+        counts += [c for c in extra_counts if c not in counts]
+        for g in counts:
+            for tech, mult in (("ddp", 1.0), ("fsdp", 1.1), ("gpipe", 1.25)):
+                profiles[(j.name, tech, g)] = Profile(
+                    j.name, tech, g, base * mult / g ** eff, 1e9, True, "t")
+    return jobs, profiles
+
+
+CLUSTER = ClusterSpec(nodes=1, gpus_per_node=8, restart_cost_s=10.0)
+CLUSTER2 = ClusterSpec(nodes=2, gpus_per_node=8, restart_cost_s=10.0)
+
+
+# ------------------------------------------------------ placement backends
+
+def test_flat_pool_allocate_release():
+    b = FlatPool(8)
+    p1 = b.allocate(5)
+    p2 = b.allocate(3)
+    assert p1.n_gpus == 5 and p2.n_gpus == 3
+    assert not set(p1.devices) & set(p2.devices)
+    assert b.allocate(1) is None
+    b.release(p1)
+    assert b.free_gpus == 5
+
+
+def test_node_aware_rejects_split_single_node_config():
+    """A 5-GPU job must live inside ONE node: two can run on two nodes,
+    a third cannot squeeze into the 2x3 leftover GPUs."""
+    b = NodeAware(nodes=2, gpus_per_node=8)
+    p1 = b.allocate(5)
+    p2 = b.allocate(5)
+    assert p1 is not None and p2 is not None
+    assert len(p1.nodes(8)) == 1 and len(p2.nodes(8)) == 1
+    assert p1.nodes(8) != p2.nodes(8)
+    assert b.free_gpus == 6          # 3 free on each node
+    assert b.allocate(5) is None     # flat pool would have said yes
+    assert FlatPool(16).feasible(5) and NodeAware(2, 8).feasible(5)
+    assert not NodeAware(2, 8).feasible(12)   # not a whole-node multiple
+
+
+def test_node_aware_whole_node_multiples():
+    b = NodeAware(nodes=2, gpus_per_node=8)
+    p16 = b.allocate(16)
+    assert p16 is not None and p16.nodes(8) == (0, 1)
+    b.release(p16)
+    p_small = b.allocate(1)
+    assert b.allocate(16) is None    # node 0 no longer fully free
+    assert b.allocate(8) is not None  # node 1 still whole
+    b.release(p_small)
+
+
+def test_node_aware_honors_preferred_nodes():
+    b = NodeAware(nodes=2, gpus_per_node=8)
+    p = b.allocate(4, preferred_nodes=[1])
+    assert p.nodes(8) == (1,)
+
+
+# --------------------------------------------------- node-aware runtime
+
+def test_runtime_node_aware_never_overpacks_node():
+    """Three 5-GPU-only jobs on 2x8 nodes: flat runs all three at once
+    (15<=16); node-aware placement never co-schedules two jobs whose
+    combined GPUs exceed a node's capacity on that node."""
+    jobs = [Job(f"n{i}", CFG, 8, 64, 100) for i in range(3)]
+    profiles = {(j.name, "fsdp", 5): Profile(j.name, "fsdp", 5, 1.0, 1e9,
+                                             True, "t") for j in jobs}
+    flat = simulate(jobs, CurrentPractice(), profiles, CLUSTER2,
+                    noise_sigma=0.0)
+    node = simulate(jobs, CurrentPractice(), profiles, CLUSTER2,
+                    noise_sigma=0.0, placement="node")
+    assert flat.makespan_s < 1.5 * 100      # all three concurrent
+    assert node.makespan_s >= 1.9 * 100     # two waves
+    gpn = CLUSTER2.gpus_per_node
+    runs = [g for g in node.gantt if g.kind == "run"]
+    events = sorted({g.start_s for g in runs})
+    for t in events:
+        live = [g for g in runs if g.start_s <= t < g.end_s - 1e-9]
+        for nu in range(CLUSTER2.nodes):
+            used = sum(len([d for d in g.devices if d // gpn == nu])
+                       for g in live)
+            assert used <= gpn, f"node {nu} overpacked at t={t}"
+        # and every single-node config sits inside one node
+        for g in live:
+            assert len({d // gpn for d in g.devices}) == 1
+
+
+def test_runtime_honors_node_milp_plan():
+    """Saturn on a node-aware cluster runs the node MILP and the runtime
+    places its node hints."""
+    cluster = ClusterSpec(nodes=2, gpus_per_node=8, restart_cost_s=10.0,
+                          placement="node")
+    jobs, profiles = mk_workload(n_jobs=4, seed=2, total_gpus=8,
+                                 extra_counts=(16,))
+    res = simulate(jobs, SaturnPolicy(time_limit_s=5), profiles, cluster,
+                   noise_sigma=0.0)
+    assert {g.job for g in res.gantt if g.kind == "run"} == \
+        {j.name for j in jobs}
+    for g in res.gantt:
+        if g.kind != "run":
+            continue
+        touched = {d // 8 for d in g.devices}
+        if g.n_gpus <= 8:
+            assert len(touched) == 1
+        else:
+            assert g.n_gpus % 8 == 0 and len(touched) == g.n_gpus // 8
+
+
+def test_node_milp_schedule_carries_node_hints():
+    jobs = [Job("big", CFG, 8, 64, 100), Job("small", CFG, 8, 64, 100)]
+    p = {("big", "fsdp", 16): Profile("big", "fsdp", 16, 1.0, 1e9, True, "t"),
+         ("small", "ddp", 4): Profile("small", "ddp", 4, 1.0, 1e9, True, "t")}
+    sol = solve_joint_nodes(jobs, p, nodes=2, gpus_per_node=8, n_slots=10)
+    sched = sol.to_schedule()
+    assert sched.solver == "milp-nodes"
+    big = sched.entry_for("big")
+    small = sched.entry_for("small")
+    assert big.nodes == (0, 1)
+    assert small.nodes is not None and len(small.nodes) == 1
+
+
+def test_infeasible_node_config_raises():
+    jobs = [Job("odd", CFG, 8, 64, 100)]
+    profiles = {("odd", "tp", 12): Profile("odd", "tp", 12, 1.0, 1e9,
+                                           True, "t")}
+    with pytest.raises(PlacementError):
+        simulate(jobs, CurrentPracticeLike12(), profiles, CLUSTER2,
+                 placement="node")
+
+
+class CurrentPracticeLike12(CurrentPractice):
+    def plan(self, jobs, remaining, profiles, cluster, current):
+        return Schedule([ScheduleEntry(j.name, "tp", 12) for j in jobs])
+
+
+# ------------------------------------------------------- online arrivals
+
+def test_jobs_never_start_before_arrival():
+    jobs, profiles = mk_workload(n_jobs=4, seed=1)
+    arrivals = {"j0": 0.0, "j1": 50.0, "j2": 120.0, "j3": 400.0}
+    import dataclasses
+    jobs = [dataclasses.replace(j, arrival_s=arrivals[j.name]) for j in jobs]
+    res = simulate(jobs, CurrentPractice(), profiles, CLUSTER,
+                   noise_sigma=0.0)
+    first_start = {}
+    for g in res.gantt:
+        if g.kind == "run":
+            first_start.setdefault(g.job, g.start_s)
+            first_start[g.job] = min(first_start[g.job], g.start_s)
+    for name, arr in arrivals.items():
+        assert first_start[name] >= arr - 1e-9, name
+    assert set(first_start) == set(arrivals)
+
+
+def test_online_arrivals_trigger_replans():
+    jobs, profiles = mk_workload(n_jobs=5, seed=4)
+    import dataclasses
+    jobs = [dataclasses.replace(j, arrival_s=60.0 * i)
+            for i, j in enumerate(jobs)]
+    offline = simulate([dataclasses.replace(j, arrival_s=0.0) for j in jobs],
+                       OptimusDynamic(), profiles, CLUSTER, noise_sigma=0.0)
+    online = simulate(jobs, OptimusDynamic(), profiles, CLUSTER,
+                      noise_sigma=0.0)
+    # one replan per distinct arrival instant beyond the initial batch
+    assert online.replans >= offline.replans + len(jobs) - 1
+
+
+def test_online_saturn_beats_current_practice():
+    """Acceptance: >=3 staggered jobs, Saturn-dynamic <= current practice."""
+    jobs, profiles = mk_workload(n_jobs=6, seed=7)
+    import dataclasses
+    jobs = [dataclasses.replace(j, arrival_s=30.0 * i)
+            for i, j in enumerate(jobs)]
+    cp = simulate(jobs, CurrentPractice(), profiles, CLUSTER,
+                  noise_sigma=0.0)
+    sat = simulate(jobs, SaturnPolicy(time_limit_s=5), profiles, CLUSTER,
+                   introspect_every_s=300, noise_sigma=0.0)
+    assert sat.makespan_s <= cp.makespan_s + 1e-6
+
+
+def test_arrival_replan_sees_settled_progress():
+    """Preemption triggered by an arrival must charge only the REMAINING
+    steps: progress made since the last settle is not thrown away."""
+    class SwitchOnArrival(CurrentPractice):
+        name = "switch"
+        dynamic = True
+
+        def plan(self, jobs, remaining, profiles, cluster, current):
+            two = len(jobs) > 1
+            return Schedule([
+                ScheduleEntry(j.name, "ddp", 2 if two and j.name == "A"
+                              else 1) for j in jobs])
+
+    a = Job("A", CFG, 8, 64, total_steps=1000)
+    b = Job("B", CFG, 8, 64, total_steps=100, arrival_s=500.0)
+    profiles = {("A", "ddp", 1): Profile("A", "ddp", 1, 1.0, 1e9, True, "t"),
+                ("A", "ddp", 2): Profile("A", "ddp", 2, 0.5, 1e9, True, "t"),
+                ("B", "ddp", 1): Profile("B", "ddp", 1, 1.0, 1e9, True, "t")}
+    res = simulate([a, b], SwitchOnArrival(), profiles, CLUSTER,
+                   noise_sigma=0.0)
+    # A: 500 steps done by t=500, preempted (restart 10s), 500 left at
+    # 0.5 s/step -> done at 760.  Without the settle, A redoes all 1000
+    # steps and finishes at 1010.
+    assert res.restarts == 1
+    assert res.makespan_s == pytest.approx(760.0, abs=1e-6)
+
+
+def test_tick_chain_survives_empty_prelude():
+    """Introspection ticks scheduled before any job has arrived must not
+    kill the tick chain for the rest of the run."""
+    jobs, profiles = mk_workload(n_jobs=4, seed=8)
+    import dataclasses
+    jobs = [dataclasses.replace(j, arrival_s=700.0) for j in jobs]
+    res = simulate(jobs, OptimusDynamic(), profiles, CLUSTER,
+                   introspect_every_s=600, noise_sigma=0.3)
+    # arrival replan at t=700 plus at least one tick replan afterwards
+    assert res.replans >= 2
+
+
+def test_session_submit_staggered():
+    from repro.core.api import SaturnSession
+    sess = SaturnSession(CLUSTER)
+    jobs, _ = mk_workload(n_jobs=3)
+    out = sess.submit(jobs, arrival_s=[0.0, 10.0, 20.0])
+    assert [j.arrival_s for j in out] == [0.0, 10.0, 20.0]
+    out2 = sess.submit(jobs[:1], arrival_s=99.0)
+    assert out2[0].arrival_s == 99.0
+    assert len(sess.jobs) == 4
+    with pytest.raises(ValueError):
+        sess.submit(jobs, arrival_s=[1.0])
+
+
+# ------------------------------------------------- restart accounting
+
+def _per_device_intervals(res):
+    by_dev = {}
+    for g in res.gantt:
+        if g.kind != "run":
+            continue
+        for d in g.devices:
+            by_dev.setdefault(d, []).append((g.start_s, g.end_s, g.job))
+    return by_dev
+
+
+def test_restart_conserves_gpu_seconds():
+    """No device is double-booked, and a preempted job's relaunch begins
+    only after its restart penalty elapses."""
+    jobs, profiles = mk_workload(n_jobs=6, seed=5)
+    res = simulate(jobs, OptimusDynamic(), profiles, CLUSTER,
+                   introspect_every_s=100, noise_sigma=0.4)
+    assert res.restarts > 0, "workload must exercise preemption"
+    for d, ivs in _per_device_intervals(res).items():
+        ivs.sort()
+        for (s1, e1, j1), (s2, e2, j2) in zip(ivs, ivs[1:]):
+            assert e1 <= s2 + 1e-9, \
+                f"device {d} double-booked: {j1}[{s1},{e1}] vs {j2}[{s2},{e2}]"
+    # restart gap: a job's run segments never overlap its restart windows
+    restarts = [(g.job, g.start_s, g.end_s) for g in res.gantt
+                if g.kind == "restart"]
+    for (name, rs, re_) in restarts:
+        for g in res.gantt:
+            if g.kind == "run" and g.job == name:
+                assert g.end_s <= rs + 1e-9 or g.start_s >= re_ - 1e-9
+    for g in res.gantt:
+        if g.kind == "restart":
+            assert abs((g.end_s - g.start_s) - CLUSTER.restart_cost_s) < 1e-9
+
+
+def test_gantt_devices_match_counts():
+    jobs, profiles = mk_workload(n_jobs=5, seed=9)
+    res = simulate(jobs, Optimus(), profiles, CLUSTER)
+    for g in res.gantt:
+        if g.kind == "run":
+            assert len(g.devices) == g.n_gpus
+            assert len(set(g.devices)) == g.n_gpus
+
+
+# ------------------------------------------- wrapper/legacy equivalence
+
+@pytest.mark.parametrize("policy_fn,introspect", [
+    (lambda: CurrentPractice(), None),
+    (lambda: RandomPolicy(3), None),
+    (lambda: Optimus(), None),
+    (lambda: OptimusDynamic(), 150.0),
+])
+def test_wrapper_matches_fixed_legacy(policy_fn, introspect):
+    """simulate() (runtime, flat pool) must reproduce the fixed legacy
+    while-loop exactly on offline workloads."""
+    jobs, profiles = mk_workload(n_jobs=7, seed=13)
+    new = simulate(jobs, policy_fn(), profiles, CLUSTER,
+                   introspect_every_s=introspect, noise_sigma=0.25)
+    old = simulate_legacy(jobs, policy_fn(), profiles, CLUSTER,
+                          introspect_every_s=introspect, noise_sigma=0.25)
+    assert new.makespan_s == pytest.approx(old.makespan_s, rel=1e-12)
+    assert new.restarts == old.restarts
+    assert len([g for g in new.gantt if g.kind == "run"]) == \
+        len([g for g in old.gantt if g.kind == "run"])
+
+
+def test_wrapper_matches_fixed_legacy_with_restarts():
+    jobs, profiles = mk_workload(n_jobs=8, seed=21)
+    new = simulate(jobs, OptimusDynamic(), profiles, CLUSTER,
+                   introspect_every_s=80, noise_sigma=0.4)
+    old = simulate_legacy(jobs, OptimusDynamic(), profiles, CLUSTER,
+                          introspect_every_s=80, noise_sigma=0.4)
+    assert new.restarts == old.restarts > 0
+    assert new.makespan_s == pytest.approx(old.makespan_s, rel=1e-12)
+
+
+# ----------------------------------------------------------- schedule IR
+
+def test_schedule_coerce_roundtrip():
+    tuples = [("a", "ddp", 2), ("b", "fsdp", 4)]
+    s = Schedule.coerce(tuples)
+    assert s.to_tuples() == tuples
+    assert Schedule.coerce(s) is s
+    assert s.assignment_map() == {"a": ("ddp", 2), "b": ("fsdp", 4)}
+    assert len(Schedule.coerce(None)) == 0
+
+
+def test_legacy_tuple_policy_still_runs():
+    """User policies that return raw tuples keep working end to end."""
+    class TuplePolicy(CurrentPractice):
+        def plan(self, jobs, remaining, profiles, cluster, current):
+            sched = super().plan(jobs, remaining, profiles, cluster,
+                                 current)
+            return sched.to_tuples()
+
+    jobs, profiles = mk_workload(n_jobs=3, seed=6)
+    res = simulate(jobs, TuplePolicy(), profiles, CLUSTER)
+    assert {g.job for g in res.gantt if g.kind == "run"} == \
+        {j.name for j in jobs}
+
+
+def test_placement_nodes_helper():
+    p = Placement((0, 1, 2, 8, 9))
+    assert p.n_gpus == 5
+    assert p.nodes(8) == (0, 1)
