@@ -1,0 +1,84 @@
+"""CI bench regression gate: compare a freshly generated BENCH_*.json
+against the committed baseline and fail on makespan regressions.
+
+    python benchmarks/check_regression.py \\
+        --baseline /tmp/BENCH_schedule.base.json \\
+        --fresh BENCH_schedule.json [--tolerance 0.10]
+
+Only *makespan-like* metrics are gated (lower is better); wall-clock
+fields are machine-dependent and ignored.  Metrics present in the fresh
+file but absent from the baseline are skipped (adding new scenarios
+never breaks the gate), but a baseline metric MISSING from the fresh
+run fails — silently dropping a scenario is a coverage regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# lower-is-better metrics worth gating across machines
+GATED_METRICS = (
+    "saturn_s",
+    "current_practice_s",
+    "makespan_exhaustive_s",
+    "makespan_interpolated_s",
+    "interp_err_median",
+)
+
+
+def collect(obj, prefix=""):
+    """Flatten nested dicts to {dotted.path: value} for gated metrics."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            path = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, dict):
+                out.update(collect(v, path))
+            elif k in GATED_METRICS and isinstance(v, (int, float)):
+                out[path] = float(v)
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed relative regression (default 10%)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = collect(json.load(f))
+    with open(args.fresh) as f:
+        fresh = collect(json.load(f))
+
+    if not base:
+        print(f"no gated metrics in baseline {args.baseline}; skipping")
+        return 0
+
+    failures = []
+    for path, b in sorted(base.items()):
+        if path not in fresh:
+            print(f"FAIL {path}: missing from fresh run "
+                  f"(scenario dropped?)")
+            failures.append(path)
+            continue
+        fv = fresh[path]
+        limit = b * (1.0 + args.tolerance)
+        status = "FAIL" if fv > limit else "ok"
+        print(f"{status:4s} {path}: baseline={b:.4g} fresh={fv:.4g} "
+              f"(limit {limit:.4g})")
+        if fv > limit:
+            failures.append(path)
+
+    if failures:
+        print(f"\n{len(failures)} metric(s) regressed beyond "
+              f"{100 * args.tolerance:.0f}%: {', '.join(failures)}")
+        return 1
+    print("\nno regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

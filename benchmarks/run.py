@@ -2,11 +2,13 @@
 roofline report for the dry-run deliverable.
 
   PYTHONPATH=src python -m benchmarks.run \\
-      [table2|solver|kernels|roofline|schedule|all] [--quick]
+      [table2|solver|kernels|roofline|schedule|profile|all] [--quick]
 
 ``schedule`` exercises the event-driven cluster runtime (flat vs
 node-aware placement, offline vs online arrivals) and writes
-BENCH_schedule.json at the repo root; ``--quick`` is the CI smoke
+BENCH_schedule.json at the repo root; ``profile`` benchmarks the
+performance-model layer (anchor trials + interpolation vs exhaustive
+profiling) and writes BENCH_profile.json; ``--quick`` is the CI smoke
 variant.  Prints ``name,us_per_call,derived`` CSV rows (harness
 contract) followed by human-readable tables.  Results also land in
 results/*.json.
@@ -244,6 +246,135 @@ def bench_schedule(quick=False):
     return out
 
 
+# ------------------------------------------------------ performance model
+
+def bench_profile(quick=False):
+    """Trial-interpolation benchmark (paper §2's <5% profiling-overhead
+    budget): exhaustive profiling of a dense GPU-count grid vs anchor
+    trials + throughput-curve interpolation.  Reports the real-trial
+    reduction, profiling wall-clock, held-out interpolation error, and
+    the end-to-end makespan delta when the Solver plans on interpolated
+    instead of exhaustive profiles.  Writes BENCH_profile.json (repo
+    root) so the trajectory accumulates across PRs."""
+    import math
+
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.executor import simulate
+    from repro.core.job import ClusterSpec, hpo_grid
+    from repro.core.library import ParallelismLibrary
+    from repro.core.profiler import HARDWARE, TrialRunner
+    from repro.core.schedule import Policy
+    from repro.core.solver import solve_joint
+
+    lib = ParallelismLibrary()
+    models = [("xlstm-125m", get_config("xlstm-125m")),
+              ("gemma3-4b", get_config("gemma3-4b"))]
+    jobs = hpo_grid(models, lrs=[1e-4] if quick else [1e-4, 1e-3],
+                    batch_sizes=[16, 32], seq_len=512, total_steps=1500)
+    G = 32
+    counts = list(range(1, G + 1))
+    cluster = ClusterSpec(nodes=4, gpus_per_node=8)
+
+    runner_ex = TrialRunner(lib, HARDWARE["a100"])
+    t0 = time.time()
+    ex = runner_ex.profile_all(jobs, counts, mode="napkin")
+    wall_ex = time.time() - t0
+
+    runner_in = TrialRunner(lib, HARDWARE["a100"])
+    t0 = time.time()
+    pm = runner_in.profile_all(jobs, counts, mode="napkin",
+                               strategy="interpolate", workers=4)
+    wall_in = time.time() - t0
+    reduction = runner_ex.trials / max(runner_in.trials, 1)
+
+    # held-out interpolation error: every combo the exhaustive sweep
+    # profiled but the interpolating runner did not
+    anchored = pm.anchor_keys()
+    errs = []
+    for key, p in ex.items():
+        if key in anchored or not p.feasible or \
+                not math.isfinite(p.step_time_s):
+            continue
+        errs.append(abs(pm.step_time(*key) - p.step_time_s)
+                    / p.step_time_s)
+    err_med = float(np.median(errs))
+    err_p90 = float(np.percentile(errs, 90))
+    err_max = float(np.max(errs))
+
+    # solver on interpolated vs exhaustive profiles; makespans compared
+    # end-to-end by replaying BOTH plans against the exhaustive
+    # ("ground truth") step times.  The MILPs must reach (gap-)optimality
+    # — a time-limit incumbent is machine-speed-dependent and would make
+    # the CI regression gate flaky — so: few slots, generous limit.
+    sol_ex = solve_joint(jobs, ex, G, n_slots=10, time_limit_s=120)
+    sol_in = solve_joint(jobs, pm, G, n_slots=10, time_limit_s=120)
+
+    class _Replay(Policy):
+        dynamic = False
+
+        def __init__(self, name, schedule):
+            self.name = name
+            self._schedule = schedule
+
+        def plan(self, jobs, remaining, profiles, cluster, current):
+            return self._schedule
+
+    res_ex = simulate(jobs, _Replay("replay-exhaustive",
+                                    sol_ex.to_schedule()),
+                      ex, cluster, noise_sigma=0.0)
+    res_in = simulate(jobs, _Replay("replay-interpolated",
+                                    sol_in.to_schedule()),
+                      ex, cluster, noise_sigma=0.0)
+    delta = res_in.makespan_s / res_ex.makespan_s - 1.0
+
+    out = {
+        "quick": quick,
+        "jobs": len(jobs),
+        "gpu_counts": G,
+        "combos_exhaustive": runner_ex.trials,
+        "combos_interpolated": runner_in.trials,
+        "trial_reduction_x": reduction,
+        "profiling_wall_exhaustive_s": wall_ex,
+        "profiling_wall_interpolated_s": wall_in,
+        "held_out_points": len(errs),
+        "interp_err_median": err_med,
+        "interp_err_p90": err_p90,
+        "interp_err_max": err_max,
+        "solver_exhaustive": sol_ex.solver,
+        "solver_interpolated": sol_in.solver,
+        "solver_est_makespan_exhaustive_s": sol_ex.makespan_s,
+        "solver_est_makespan_interpolated_s": sol_in.makespan_s,
+        "makespan_exhaustive_s": res_ex.makespan_s,
+        "makespan_interpolated_s": res_in.makespan_s,
+        "makespan_delta_pct": 100.0 * delta,
+    }
+    emit("profile_trials", wall_in * 1e6,
+         f"real={runner_in.trials} exhaustive={runner_ex.trials} "
+         f"reduction={reduction:.1f}x")
+    emit("profile_interp_err", err_med * 1e6,
+         f"median={err_med:.3f} p90={err_p90:.3f} max={err_max:.3f} "
+         f"held_out={len(errs)}")
+    emit("profile_makespan_delta", abs(delta) * 1e6,
+         f"interp={res_in.makespan_s:.0f}s exhaustive="
+         f"{res_ex.makespan_s:.0f}s delta={100 * delta:+.2f}%")
+    # acceptance gates (ISSUE 2): >=4x fewer real trials, <=15% median
+    # interpolation error, and planning on interpolated profiles costs
+    # no more than 5% makespan vs exhaustive (one-sided: slot-rounding
+    # luck can make the interpolated plan strictly better)
+    assert sol_ex.solver == sol_in.solver, \
+        f"asymmetric solver fallback: {sol_ex.solver} vs {sol_in.solver}"
+    assert reduction >= 4.0, f"trial reduction {reduction:.2f}x < 4x"
+    assert err_med <= 0.15, f"median interp error {err_med:.3f} > 0.15"
+    assert delta <= 0.05, f"makespan delta {100 * delta:.2f}% > +5%"
+    path = os.path.join(ROOT, "BENCH_profile.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\nwrote {path}")
+    return out
+
+
 # ---------------------------------------------------------- solver scaling
 
 def bench_solver():
@@ -459,7 +590,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("which", nargs="?", default="all",
                     choices=["all", "roofline", "kernels", "solver",
-                             "introspection", "table2", "schedule"])
+                             "introspection", "table2", "schedule",
+                             "profile"])
     ap.add_argument("--quick", action="store_true",
                     help="reduced workloads (CI smoke job)")
     args = ap.parse_args()
@@ -473,6 +605,8 @@ def main() -> None:
         bench_solver()
     if which in ("schedule", "all"):
         bench_schedule(quick=args.quick)
+    if which in ("profile", "all"):
+        bench_profile(quick=args.quick)
     if which in ("introspection", "all"):
         bench_introspection()
     if which in ("table2", "all"):

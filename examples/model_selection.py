@@ -38,6 +38,11 @@ def main():
                     help="stagger job arrivals (online model selection)")
     ap.add_argument("--arrival-gap", type=float, default=600.0,
                     help="seconds between successive arrivals with --online")
+    ap.add_argument("--profile-strategy", default="interpolate",
+                    choices=["interpolate", "exhaustive"],
+                    help="interpolate: anchor trials + throughput curves "
+                         "over the dense 1..G grid (paper's <5%% overhead "
+                         "budget); exhaustive: profile every combo")
     args = ap.parse_args()
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -50,8 +55,13 @@ def main():
                           placement=args.placement)
     lib = ParallelismLibrary()
     runner = TrialRunner(lib, HARDWARE["a100"])
-    counts = [1, 2, 4, 8] + ([16] if args.nodes == 2 else [])
-    profiles = runner.profile_all(jobs, counts, mode="analytic")
+    if args.profile_strategy == "interpolate":
+        # dense solver grid, sparse (anchor-only) real profiling
+        counts = list(range(1, cluster.total_gpus + 1))
+    else:
+        counts = [1, 2, 4, 8] + ([16] if args.nodes == 2 else [])
+    profiles = runner.profile_all(jobs, counts, mode="analytic",
+                                  strategy=args.profile_strategy)
 
     mode = "online" if args.online else "offline"
     print(f"{args.workload}: {len(jobs)} jobs, {cluster.total_gpus} GPUs, "

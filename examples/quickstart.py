@@ -39,7 +39,9 @@ def main():
         seq_len=1024, total_steps=1000)
     sess.submit(jobs)
 
-    sess.profile(mode="analytic")            # Trial Runner
+    # Trial Runner: real trials at anchor counts only; the performance
+    # model interpolates every other count for the Solver
+    sess.profile(mode="analytic", strategy="interpolate")
     base = sess.run(policy=CurrentPractice())
     sat = sess.run()                         # Saturn: joint MILP + introspection
 

@@ -15,8 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import concrete_batch, get_config
-from repro.models.transformer import (init_decode_state, init_model,
-                                      prefill_forward)
+from repro.models.transformer import init_decode_state, init_model
 from repro.train.steps import make_serve_step
 
 

@@ -16,11 +16,10 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 
 from repro.configs import get_config
 from repro.core.executor import LocalRunner
-from repro.core.job import ClusterSpec, Job
+from repro.core.job import Job
 from repro.core.library import ParallelismLibrary
 from repro.core.profiler import HARDWARE, TrialRunner
 from repro.core.solver import solve_joint

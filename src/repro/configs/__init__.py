@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.config import INPUT_SHAPES, InputShape, ModelConfig
+from ..models.config import InputShape, ModelConfig
 
 ARCH_IDS = [
     "stablelm-12b",

@@ -8,6 +8,8 @@ Layering (each layer only imports downward):
     events.py     event types + queue (arrival, completion, restart, tick)
     placement.py  pluggable device assignment: FlatPool | NodeAware
     runtime.py    ClusterState + the discrete-event execution engine
+    perfmodel.py  throughput curves over GPU count: anchor trials +
+                  interpolation (PerfModel, the profiles contract)
     solver.py     the joint MILPs (flat + node-locality), greedy fallback
     baselines.py  paper baselines + the Saturn policy (emit Schedule IR)
     executor.py   simulate() compatibility wrapper + legacy comparator,
@@ -16,7 +18,7 @@ Layering (each layer only imports downward):
 """
 from .api import SaturnSession                              # noqa: F401
 from .job import ClusterSpec, Job, hpo_grid                 # noqa: F401
+from .perfmodel import PerfModel, ThroughputCurve, select_anchor_counts  # noqa: F401
 from .placement import FlatPool, NodeAware, make_backend    # noqa: F401
 from .runtime import SimResult, simulate_runtime            # noqa: F401
-from .schedule import (Placement, Policy, Schedule,         # noqa: F401
-                       ScheduleEntry)
+from .schedule import Placement, Policy, Schedule, ScheduleEntry  # noqa: F401

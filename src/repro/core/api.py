@@ -15,13 +15,13 @@ replan on arrivals and introspection ticks with real restart penalties.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import List, Optional, Sequence, Union
 
 from .baselines import SaturnPolicy
 from .executor import simulate
 from .job import ClusterSpec, Job
 from .library import ParallelismLibrary
-from .profiler import HARDWARE, HardwareSpec, Profile, TrialRunner
+from .profiler import HARDWARE, HardwareSpec, TrialRunner
 from .runtime import SimResult
 from .schedule import Policy
 
@@ -34,7 +34,8 @@ class SaturnSession:
         self.library = ParallelismLibrary()
         self.runner = TrialRunner(self.library, hardware, cache_path)
         self.jobs: List[Job] = []
-        self.profiles: Dict[Tuple[str, str, int], Profile] = {}
+        # a PerfModel (strategy="interpolate") or legacy profile dict
+        self.profiles = {}
 
     # ------------------------------------------------- Parallelism Library
     def register_technique(self, technique):
@@ -64,8 +65,13 @@ class SaturnSession:
         self.jobs.extend(jobs)
         return jobs
 
-    def gpu_counts(self):
+    def gpu_counts(self, dense: bool = False):
+        """Candidate GPU counts: the geometric ladder (what gets real
+        trials), or with ``dense`` every count 1..G (what the
+        performance model evaluates for free)."""
         g = self.cluster.total_gpus
+        if dense:
+            return list(range(1, g + 1))
         counts, c = [], 1
         while c <= g:
             counts.append(c)
@@ -75,9 +81,24 @@ class SaturnSession:
         return counts
 
     # --------------------------------------------------------- Trial Runner
-    def profile(self, mode: str = "analytic"):
+    def profile(self, mode: str = "analytic",
+                strategy: str = "interpolate",
+                workers: Optional[int] = None):
+        """Run the Trial Runner over the submitted workload.
+
+        ``strategy="interpolate"`` (default, the paper's <5%-overhead
+        mechanism) runs real trials only at the geometric anchor counts
+        and returns a curve-backed
+        :class:`~repro.core.perfmodel.PerfModel` covering EVERY count
+        1..G — the Solver gets the dense allocation grid at the sparse
+        profiling price.  ``strategy="exhaustive"`` profiles the
+        geometric ladder directly and returns the legacy dict.
+        Real trials fan out across ``workers`` threads (auto by default;
+        empirical trials always run serially).
+        """
         self.profiles = self.runner.profile_all(
-            self.jobs, self.gpu_counts(), mode=mode)
+            self.jobs, self.gpu_counts(dense=(strategy == "interpolate")),
+            mode=mode, strategy=strategy, workers=workers)
         return self.profiles
 
     # ------------------------------------------------------ Solver + exec

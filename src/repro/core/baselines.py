@@ -13,28 +13,28 @@ All policies emit Schedule IR (:class:`repro.core.schedule.Schedule`).
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, List, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
-from .job import ClusterSpec, Job
+from .job import Job
+from .perfmodel import iter_job_profiles
 from .schedule import Policy, Schedule, ScheduleEntry
-from .solver import (Choice, choices_from_profiles, solve_joint,
-                     solve_joint_nodes)
+from .solver import solve_joint, solve_joint_nodes
 
 
-def _feasible(job, profiles, g_range):
-    out = []
-    for (jname, tech, g), p in profiles.items():
-        if jname == job.name and p.feasible:
-            out.append((tech, g, p.step_time_s))
-    return out
+def _feasible(job, profiles):
+    """Feasible (technique, g, step_time) triples for one job — from
+    the legacy dict or straight off a PerfModel's curves."""
+    return [(tech, g, p.step_time_s)
+            for tech, g, p in iter_job_profiles(profiles, job.name)
+            if p.feasible]
 
 
 def _best_at_count(job, profiles, g):
-    cands = [(tech, p.step_time_s) for (jn, tech, gg), p in profiles.items()
-             if jn == job.name and gg == g and p.feasible]
+    cands = [(tech, p.step_time_s)
+             for tech, gg, p in iter_job_profiles(profiles, job.name)
+             if gg == g and p.feasible]
     if not cands:
         return None
     return min(cands, key=lambda x: x[1])
@@ -60,7 +60,7 @@ class CurrentPractice(Policy):
             else:
                 best = _best_at_count(j, profiles, g)
                 if best is None:  # fall back to any feasible
-                    feas = _feasible(j, profiles, None)
+                    feas = _feasible(j, profiles)
                     if not feas:
                         raise ValueError(f"{j.name}: infeasible everywhere")
                     tech, g, _ = min(feas, key=lambda x: x[2])
@@ -83,7 +83,7 @@ class CurrentPracticeTuned(CurrentPractice):
             g = cluster.gpus_per_node
             best = _best_at_count(j, profiles, g)
             if best is None:
-                feas = _feasible(j, profiles, None)
+                feas = _feasible(j, profiles)
                 if not feas:
                     raise ValueError(f"{j.name}: infeasible everywhere")
                 tech, g, _ = min(feas, key=lambda x: x[2])
@@ -104,7 +104,7 @@ class RandomPolicy(Policy):
         rng = np.random.RandomState(self.seed)
         order = []
         for j in jobs:
-            feas = _feasible(j, profiles, None)
+            feas = _feasible(j, profiles)
             tech, g, _ = feas[rng.randint(len(feas))]
             order.append((j.name, tech, g))
         rng.shuffle(order)
@@ -124,8 +124,8 @@ class Optimus(Policy):
         runtime_at: Dict[str, Dict[int, Tuple[str, float]]] = {}
         for j in live:
             per_g: Dict[int, Tuple[str, float]] = {}
-            for (jn, tech, g), p in profiles.items():
-                if jn != j.name or not p.feasible:
+            for tech, g, p in iter_job_profiles(profiles, j.name):
+                if not p.feasible:
                     continue
                 t = p.step_time_s * remaining[j.name]
                 if g not in per_g or t < per_g[g][1]:

@@ -210,7 +210,6 @@ class LocalRunner:
 
         from ..checkpoint.store import (load_checkpoint, load_metadata,
                                         save_checkpoint)
-        from ..configs import concrete_batch
         from ..data.synthetic import SyntheticLM
         from ..parallelism.build import BuiltJob
 

@@ -9,7 +9,7 @@ import os
 from typing import Dict, Iterable, List, Optional, Tuple
 
 from ..models.config import ModelConfig
-from ..parallelism.base import Plan, Technique
+from ..parallelism.base import Technique
 from ..parallelism.techniques import DEFAULT_TECHNIQUES
 
 

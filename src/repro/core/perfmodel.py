@@ -1,0 +1,267 @@
+"""Performance-model layer: throughput curves over GPU count.
+
+The paper's Trial Runner keeps profiling overhead under ~5% of workload
+runtime by profiling only a *subset* of ⟨model, parallelism, GPU-count⟩
+combinations and interpolating the rest (Saturn §2; the VLDB version
+makes the same point about amortized, cached trial runs).  This module
+is that layer:
+
+- :func:`select_anchor_counts` picks the geometric subset of GPU counts
+  that gets REAL trials — always including the technique-feasibility
+  boundary counts (smallest and largest valid);
+- :class:`ThroughputCurve` fits one ⟨job, technique⟩ scaling curve to
+  those anchors — piecewise power-law, i.e. linear in (log g, log t)
+  space, which preserves monotonicity between anchors and matches the
+  ``t ∝ g^(-efficiency)`` shape of data/model-parallel scaling — and
+  evaluates ``step_time(g)``, ``mem(g)`` and ``feasible(g)`` at ANY
+  count.  Extrapolation beyond the anchored range continues the edge
+  segment's slope, clamped to [-1, +1] in log-log space: never better
+  than perfect linear scaling, never a worse-than-linear slowdown;
+- :class:`PerfModel` is the consumer facade: a read-only Mapping with
+  the legacy ``profiles[(job, tech, g)] -> Profile`` contract (missing
+  counts are synthesized from the curve, ``source="interpolated"``),
+  plus curve-native accessors (``curve()``, ``curves_for()``,
+  ``step_time()``) for the Solver, the baselines and the runtime's
+  introspection replans.
+
+Feasibility at a count ``g`` has two independent parts, and the curve
+keeps them separate: *validity* (the technique's ``search_space`` —
+exact, computed for every count without a trial) and *memory fit*
+(``mem(g) <= hbm_capacity`` — interpolated between anchors).
+"""
+from __future__ import annotations
+
+import math
+from collections.abc import Mapping
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from .profiler import Profile
+
+# Extrapolation slope clamp in log-log space: -1 is perfect linear
+# scaling (t halves when g doubles); +1 bounds observed slowdowns.
+_SLOPE_LO = -1.0
+_SLOPE_HI = 1.0
+
+
+def select_anchor_counts(valid_counts: Iterable[int],
+                         ratio: float = 2.0) -> List[int]:
+    """The geometric subset of ``valid_counts`` that gets real trials.
+
+    Walks the sorted valid counts keeping every count that is at least
+    ``ratio`` times the previously kept one, and always keeps the
+    smallest and largest valid counts (the technique-feasibility
+    boundary points the curve must not extrapolate across).
+    """
+    vs = sorted(set(int(g) for g in valid_counts))
+    if not vs:
+        return []
+    anchors = [vs[0]]
+    target = vs[0] * ratio
+    for g in vs[1:]:
+        if g >= target - 1e-9:
+            anchors.append(g)
+            target = g * ratio
+    if anchors[-1] != vs[-1]:
+        anchors.append(vs[-1])
+    return anchors
+
+
+def _loglog_eval(lxs: np.ndarray, lys: np.ndarray, g: float) -> float:
+    """Piecewise-linear evaluation in log-log space with slope-clamped
+    extrapolation past either end."""
+    x = math.log(g)
+    if len(lxs) == 1:
+        return math.exp(float(lys[0]))
+    if x <= lxs[0]:
+        s = (lys[1] - lys[0]) / (lxs[1] - lxs[0])
+        s = min(max(s, _SLOPE_LO), _SLOPE_HI)
+        return math.exp(float(lys[0] + s * (x - lxs[0])))
+    if x >= lxs[-1]:
+        s = (lys[-1] - lys[-2]) / (lxs[-1] - lxs[-2])
+        s = min(max(s, _SLOPE_LO), _SLOPE_HI)
+        return math.exp(float(lys[-1] + s * (x - lxs[-1])))
+    return math.exp(float(np.interp(x, lxs, lys)))
+
+
+class ThroughputCurve:
+    """One ⟨job, technique⟩ scaling curve over GPU count, fit to real
+    trial anchors."""
+
+    def __init__(self, job: str, technique: str, hbm_capacity: float,
+                 anchors: Dict[int, Profile],
+                 valid: Iterable[int], domain: Iterable[int]):
+        self.job = job
+        self.technique = technique
+        self.hbm_capacity = hbm_capacity
+        self.anchors = {int(g): p for g, p in sorted(anchors.items())}
+        self.valid = frozenset(int(g) for g in valid)
+        self.domain = frozenset(int(g) for g in domain)
+        # fit arrays: anchors with finite measurements (memory-infeasible
+        # anchors still carry real numbers and inform the fit; search-
+        # space-invalid ones are inf and excluded)
+        fit = [(g, p) for g, p in self.anchors.items()
+               if math.isfinite(p.step_time_s) and p.step_time_s > 0]
+        self._fit_counts = [g for g, _ in fit]
+        if fit:
+            self._lg = np.log([g for g, _ in fit])
+            self._lt = np.log([p.step_time_s for _, p in fit])
+            self._lm = np.log([max(p.mem_per_device, 1.0) for _, p in fit])
+        else:
+            self._lg = self._lt = self._lm = np.zeros(0)
+
+    # ------------------------------------------------------------- eval
+    def valid_at(self, g: int) -> bool:
+        """Search-space validity (exact; no trial involved)."""
+        if g in self.valid:
+            return True
+        if g in self.domain:
+            return False
+        # counts outside the modeled domain: trust interpolation only
+        # inside the anchored range
+        return bool(self._fit_counts) and \
+            self._fit_counts[0] <= g <= self._fit_counts[-1]
+
+    def step_time(self, g: int) -> float:
+        g = int(g)
+        if g in self.anchors:
+            return self.anchors[g].step_time_s
+        if not self.valid_at(g) or not self._fit_counts:
+            return float("inf")
+        return _loglog_eval(self._lg, self._lt, g)
+
+    def mem(self, g: int) -> float:
+        g = int(g)
+        if g in self.anchors:
+            return self.anchors[g].mem_per_device
+        if not self.valid_at(g) or not self._fit_counts:
+            return float("inf")
+        return _loglog_eval(self._lg, self._lm, g)
+
+    def feasible(self, g: int) -> bool:
+        g = int(g)
+        if g in self.anchors:
+            return self.anchors[g].feasible
+        if not self.valid_at(g):
+            return False
+        m = self.mem(g)
+        return math.isfinite(m) and m <= self.hbm_capacity and \
+            math.isfinite(self.step_time(g))
+
+    def profile(self, g: int) -> Profile:
+        """A Profile record at any count: the anchor itself where one
+        exists, an interpolated point everywhere else.  Evaluates each
+        curve exactly once per field (policies rebuild grids every
+        replan, so this is the hot path)."""
+        g = int(g)
+        if g in self.anchors:
+            return self.anchors[g]
+        terms = {"n_anchors": float(len(self._fit_counts))}
+        if not self.valid_at(g) or not self._fit_counts:
+            return Profile(self.job, self.technique, g, float("inf"),
+                           float("inf"), False, "interpolated", terms)
+        t = _loglog_eval(self._lg, self._lt, g)
+        m = _loglog_eval(self._lg, self._lm, g)
+        feas = math.isfinite(t) and math.isfinite(m) and \
+            m <= self.hbm_capacity
+        return Profile(self.job, self.technique, g, t, m, feas,
+                       "interpolated", terms)
+
+
+class PerfModel(Mapping):
+    """Curves for a whole workload, with the legacy Mapping contract.
+
+    Iteration / ``len`` / ``items()`` enumerate ``(job, technique, g)``
+    over the model's count grid restricted to search-space-valid counts
+    — exactly the keys an exhaustive ``profile_all`` dict would hold —
+    so every dict-shaped consumer (the MILPs, baselines, the runtime's
+    noise model) works unchanged.  ``__getitem__`` additionally accepts
+    off-grid counts: curves are continuous, so introspection replans may
+    evaluate counts nobody profiled.
+    """
+
+    def __init__(self, curves: Dict[Tuple[str, str], ThroughputCurve],
+                 counts: Iterable[int]):
+        self._curves = dict(curves)
+        self.counts = sorted(set(int(c) for c in counts))
+        self._keys = [(j, t, g) for (j, t), c in self._curves.items()
+                      for g in self.counts if g in c.valid]
+
+    # --------------------------------------------------- Mapping contract
+    def __getitem__(self, key: Tuple[str, str, int]) -> Profile:
+        job, tech, g = key
+        c = self._curves.get((job, tech))
+        if c is None:
+            raise KeyError(key)
+        return c.profile(int(g))
+
+    def __iter__(self) -> Iterator[Tuple[str, str, int]]:
+        return iter(self._keys)
+
+    def __len__(self) -> int:
+        return len(self._keys)
+
+    # ----------------------------------------------------- curve access
+    def curve(self, job: str, technique: str) -> ThroughputCurve:
+        return self._curves[(job, technique)]
+
+    def curves_for(self, job: str) -> List[ThroughputCurve]:
+        return [c for (j, _), c in self._curves.items() if j == job]
+
+    def step_time(self, job: str, technique: str, g: int) -> float:
+        return self._curves[(job, technique)].step_time(g)
+
+    def mem(self, job: str, technique: str, g: int) -> float:
+        return self._curves[(job, technique)].mem(g)
+
+    def feasible(self, job: str, technique: str, g: int) -> bool:
+        c = self._curves.get((job, technique))
+        return c.feasible(g) if c is not None else False
+
+    # ------------------------------------------------------------ stats
+    def anchor_keys(self) -> set:
+        """The (job, technique, g) combos backed by real trials."""
+        return {(c.job, c.technique, g)
+                for c in self._curves.values() for g in c.anchors}
+
+    def n_anchors(self) -> int:
+        return sum(len(c.anchors) for c in self._curves.values())
+
+    def to_dict(self) -> Dict[Tuple[str, str, int], Profile]:
+        """Materialize the full grid as a plain dict (legacy export)."""
+        return {k: self[k] for k in self._keys}
+
+
+# ------------------------------------------------- dict/model adapters
+
+def iter_job_profiles(profiles, job_name: str
+                      ) -> Iterator[Tuple[str, int, Profile]]:
+    """Yield (technique, g, Profile) for one job from either a legacy
+    profile dict or a :class:`PerfModel`."""
+    if isinstance(profiles, PerfModel):
+        for curve in profiles.curves_for(job_name):
+            for g in profiles.counts:
+                if g in curve.valid:
+                    yield curve.technique, g, curve.profile(g)
+        return
+    for (jn, tech, g), p in profiles.items():
+        if jn == job_name:
+            yield tech, g, p
+
+
+def step_time_of(profiles, job: str, tech: str, g: int) -> float:
+    """Estimated step time from either representation; curve-backed
+    models answer at any count, dicts only at profiled ones."""
+    if isinstance(profiles, PerfModel):
+        return profiles.step_time(job, tech, g)
+    return profiles[(job, tech, g)].step_time_s
+
+
+def lookup_profile(profiles, job: str, tech: str, g: int
+                   ) -> Optional[Profile]:
+    """Profile record from either representation (None if unknown)."""
+    try:
+        return profiles[(job, tech, g)]
+    except KeyError:
+        return None

@@ -11,6 +11,20 @@ Two interchangeable backends share one cache and result type:
   ``cost_analysis()`` + collective bytes parsed out of the HLO, against
   the target hardware's constants.  This is the CPU-container stand-in
   for running the two minibatches on real accelerators.
+
+A third ``napkin`` mode skips lowering entirely (pure closed-form
+roofline) — the cheap backend for benchmarks and the performance-model
+layer's synthetic sweeps.
+
+``profile_all`` supports two strategies (paper §2's <5% overhead
+budget): ``"exhaustive"`` runs a real trial for every valid combo and
+returns the legacy dict, while ``"interpolate"`` runs trials only at a
+geometric subset of counts per ⟨job, technique⟩ and returns a
+:class:`~repro.core.perfmodel.PerfModel` of fitted throughput curves.
+Either way, the outstanding real trials run on a thread worker pool and
+land in a versioned, atomically-written JSON cache (batched flushes:
+one rewrite per ``flush_every`` new profiles, temp-file + ``os.replace``
+so a crash mid-write can never corrupt the cache).
 """
 from __future__ import annotations
 
@@ -18,14 +32,15 @@ import dataclasses
 import json
 import os
 import re
+import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models.config import ModelConfig
 from ..models.params import abstract_params, param_count
 from ..models.transformer import model_spec
 from ..parallelism.base import Plan
@@ -92,45 +107,152 @@ class Profile:
         return dataclasses.asdict(self)
 
 
+CACHE_VERSION = 2          # bump when the Profile schema changes
+PROFILE_MODES = ("analytic", "empirical", "napkin")
+
+
 class TrialRunner:
     def __init__(self, library: ParallelismLibrary,
                  hardware: HardwareSpec = HARDWARE["a100"],
-                 cache_path: Optional[str] = None):
+                 cache_path: Optional[str] = None,
+                 flush_every: int = 16):
         self.library = library
         self.hw = hardware
         self.cache_path = cache_path
+        self.flush_every = max(1, flush_every)
+        self.trials = 0            # real trials computed by THIS runner
+        self._dirty = 0            # new profiles since the last flush
+        self._lock = threading.Lock()
         self._cache: Dict[Tuple[str, str, int, str], Profile] = {}
         if cache_path and os.path.exists(cache_path):
-            with open(cache_path) as f:
-                for rec in json.load(f):
-                    p = Profile(**rec)
-                    self._cache[(p.job, p.technique, p.n_devices, p.source)] = p
+            self._load_cache(cache_path)
+
+    def _load_cache(self, path: str) -> None:
+        """Versioned load: stale schemas (the legacy bare list, an older
+        version number) and torn/corrupt files are silently discarded —
+        a cache is a cache, never a crash."""
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (json.JSONDecodeError, OSError, UnicodeDecodeError):
+            return
+        if not isinstance(data, dict) or data.get("version") != CACHE_VERSION:
+            return
+        for rec in data.get("profiles", []):
+            try:
+                p = Profile(**rec)
+            except TypeError:
+                continue
+            self._cache[(p.job, p.technique, p.n_devices, p.source)] = p
 
     # ------------------------------------------------------------- public
     def profile(self, job: Job, technique: str, n_devices: int,
                 mode: str = "analytic") -> Profile:
+        if mode not in PROFILE_MODES:
+            raise ValueError(f"unknown profiling mode {mode!r}; "
+                             f"expected one of {PROFILE_MODES}")
         key = (job.name, technique, n_devices, mode)
-        if key in self._cache:
-            return self._cache[key]
+        with self._lock:
+            if key in self._cache:
+                return self._cache[key]
         tech = self.library.get(technique)
         if not tech.search_space(job.cfg, n_devices):
             prof = Profile(job.name, technique, n_devices, float("inf"),
                            float("inf"), False, mode)
-        elif mode == "empirical":
-            prof = self._profile_empirical(job, technique, n_devices)
+            ran_trial = False
         else:
-            prof = self._profile_analytic(job, technique, n_devices)
-        self._cache[key] = prof
-        self._flush()
+            if mode == "empirical":
+                prof = self._profile_empirical(job, technique, n_devices)
+            elif mode == "napkin":
+                prof = self._profile_napkin(job, technique, n_devices)
+            else:
+                prof = self._profile_analytic(job, technique, n_devices)
+            ran_trial = True
+        with self._lock:
+            self._cache[key] = prof
+            if ran_trial:
+                self.trials += 1
+            self._dirty += 1
+            if self.cache_path and self._dirty >= self.flush_every:
+                self._flush_locked()
         return prof
 
-    def profile_all(self, jobs, gpu_counts, mode="analytic"):
-        """Profile every job under every valid (technique, count)."""
-        out = {}
+    def profile_all(self, jobs, gpu_counts, mode="analytic", *,
+                    strategy: str = "exhaustive",
+                    workers: Optional[int] = None,
+                    anchor_ratio: float = 2.0):
+        """Profile a workload over ``gpu_counts``.
+
+        ``strategy="exhaustive"`` runs a real trial at every valid
+        (technique, count) and returns the legacy profile dict.
+
+        ``strategy="interpolate"`` runs trials only at the geometric
+        anchor subset per ⟨job, technique⟩ (plus feasibility boundary
+        counts) and returns a :class:`~repro.core.perfmodel.PerfModel`
+        whose curves evaluate every other count.
+        """
+        from .perfmodel import (PerfModel, ThroughputCurve,
+                                select_anchor_counts)
+        counts = sorted(set(int(g) for g in gpu_counts))
+        if strategy == "exhaustive":
+            tasks = [(job, tech, g) for job in jobs
+                     for tech, g in self.library.candidates(job.cfg, counts)]
+            self._run_trials(tasks, mode, workers)
+            self.flush()
+            return {(job.name, tech, g): self._cache[(job.name, tech, g,
+                                                      mode)]
+                    for job, tech, g in tasks}
+        if strategy != "interpolate":
+            raise ValueError(f"unknown profiling strategy {strategy!r}; "
+                             f"expected 'exhaustive' or 'interpolate'")
+        plan: Dict[Tuple[str, str], Tuple[Job, list, list]] = {}
+        tasks = []
         for job in jobs:
-            for tech, g in self.library.candidates(job.cfg, gpu_counts):
-                out[(job.name, tech, g)] = self.profile(job, tech, g, mode)
-        return out
+            for tech_name, tech in self.library.items():
+                valid = [g for g in counts if tech.search_space(job.cfg, g)]
+                if not valid:
+                    continue
+                anchors = select_anchor_counts(valid, anchor_ratio)
+                plan[(job.name, tech_name)] = (job, valid, anchors)
+                tasks.extend((job, tech_name, g) for g in anchors)
+        self._run_trials(tasks, mode, workers)
+        self.flush()
+        curves = {}
+        for (jname, tech_name), (job, valid, anchors) in plan.items():
+            profs = {g: self._cache[(jname, tech_name, g, mode)]
+                     for g in anchors}
+            curves[(jname, tech_name)] = ThroughputCurve(
+                jname, tech_name, self.hw.hbm_capacity, profs,
+                valid=valid, domain=counts)
+        return PerfModel(curves, counts)
+
+    def _run_trials(self, tasks, mode: str, workers: Optional[int]) -> None:
+        """Run the outstanding real trials, in parallel where safe.
+
+        Empirical trials time real minibatches, so they must not share
+        the machine — those always run serially.  Analytic/napkin trials
+        are compile/arithmetic work and fan out over a thread pool.
+        """
+        seen = set()
+        todo = []
+        for job, tech, g in tasks:
+            key = (job.name, tech, g)
+            if key in seen:
+                continue
+            seen.add(key)
+            todo.append((job, tech, g))
+        if workers is None:
+            workers = 1 if mode == "empirical" else \
+                min(8, os.cpu_count() or 1)
+        if workers <= 1 or len(todo) <= 1 or mode == "empirical":
+            for job, tech, g in todo:
+                self.profile(job, tech, g, mode)
+            return
+        with ThreadPoolExecutor(max_workers=workers) as pool:
+            futs = [pool.submit(self.profile, job, tech, g, mode)
+                    for job, tech, g in todo]
+            for f in futs:
+                f.result()
 
     # --------------------------------------------------------- empirical
     def _profile_empirical(self, job: Job, technique: str,
@@ -163,7 +285,21 @@ class TrialRunner:
                           n_devices: int) -> Profile:
         tech = self.library.get(technique)
         plan = tech.plan(job.cfg, n_devices)
-        terms = self._roofline_terms(job, plan)
+        return self._finish(job, technique, n_devices,
+                            self._roofline_terms(job, plan), "analytic")
+
+    def _profile_napkin(self, job: Job, technique: str,
+                        n_devices: int) -> Profile:
+        """Closed-form roofline only — no lowering/compilation.  The
+        cheap deterministic backend for benchmark sweeps."""
+        tech = self.library.get(technique)
+        plan = tech.plan(job.cfg, n_devices)
+        return self._finish(job, technique, n_devices,
+                            self._roofline_napkin(job, plan), "napkin")
+
+    def _finish(self, job: Job, technique: str, n_devices: int,
+                terms: Dict[str, float], source: str) -> Profile:
+        tech = self.library.get(technique)
         mem = terms.pop("mem_per_device")
         # roofline: compute and memory overlap with collectives imperfectly;
         # take max(compute, memory) + collective (conservative serial comm)
@@ -171,7 +307,7 @@ class TrialRunner:
         t *= tech.step_overhead()
         terms["modeled_step_s"] = t
         return Profile(job.name, technique, n_devices, t, mem,
-                       mem <= self.hw.hbm_capacity, "analytic", terms)
+                       mem <= self.hw.hbm_capacity, source, terms)
 
     def _mem_estimate(self, job: Job, plan: Plan) -> float:
         """Params + AdamW state + activation estimate, per device."""
@@ -289,10 +425,38 @@ class TrialRunner:
         }
 
     # -------------------------------------------------------------- misc
-    def _flush(self):
-        if not self.cache_path:
+    def flush(self) -> None:
+        """Write the cache to disk now (atomic temp-file + rename)."""
+        with self._lock:
+            self._flush_locked()
+
+    # flushes are batched, so direct profile() callers could otherwise
+    # lose the tail of their (possibly expensive empirical) trials when
+    # the runner goes away without an explicit flush()
+    def __enter__(self) -> "TrialRunner":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.flush()
+
+    def __del__(self):
+        try:
+            self.flush()
+        except Exception:
+            pass               # interpreter teardown: best effort only
+
+    def _flush_locked(self) -> None:
+        if not self.cache_path or not self._dirty:
             return
-        os.makedirs(os.path.dirname(os.path.abspath(self.cache_path)),
-                    exist_ok=True)
-        with open(self.cache_path, "w") as f:
-            json.dump([p.to_json() for p in self._cache.values()], f)
+        path = os.path.abspath(self.cache_path)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        payload = {"version": CACHE_VERSION,
+                   "profiles": [p.to_json() for p in self._cache.values()]}
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)
+        self._dirty = 0
+
+    # back-compat alias (pre-batching callers)
+    _flush = flush

@@ -16,7 +16,9 @@ discrete-event simulation over :mod:`.events`:
   GPU-second conservation checkable per device.
 
 The simulator separates *estimated* step times (what policies see, from
-the Trial Runner) from *true* step times (estimate x seeded noise), so
+the Trial Runner — either an exhaustive profile dict or a curve-backed
+:class:`~repro.core.perfmodel.PerfModel`) from *true* step times
+(estimate x seeded noise), so
 dynamic policies (introspection) win for the same reason they do on a
 real cluster: plans based on estimates drift from reality, and
 re-solving on observed remaining work recovers the gap.
@@ -24,17 +26,17 @@ re-solving on observed remaining work recovers the gap.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .events import (Event, EventQueue, IntrospectionTick, JobArrival,
+from .events import (EventQueue, IntrospectionTick, JobArrival,
                      JobCompletion, RestartDone)
 from .job import ClusterSpec, Job
+from .perfmodel import step_time_of
 from .placement import PlacementBackend, PlacementError, make_backend
 from .profiler import Profile
-from .schedule import Placement, Policy, Schedule, ScheduleEntry
+from .schedule import Placement, Policy, Schedule
 
 
 @dataclasses.dataclass
@@ -141,10 +143,12 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
     next_token = [0]
 
     def est_step(jname, tech, g):
-        return profiles[(jname, tech, g)].step_time_s
+        # curve-backed performance models answer at ANY count, so
+        # introspection replans may pick counts nobody profiled
+        return step_time_of(profiles, jname, tech, g)
 
     def true_step(jname, tech, g):
-        return est_step(jname, tech, g) * noise[(jname, tech, g)]
+        return est_step(jname, tech, g) * noise.get((jname, tech, g), 1.0)
 
     def start_fitting():
         """List scheduling: repeatedly start the first schedule entry

@@ -157,19 +157,26 @@ class _MilpBuilder:
         return res
 
 
-def choices_from_profiles(job: Job, profiles: Dict[Tuple[str, str, int], Profile],
+def choices_from_profiles(job: Job, profiles,
                           *, prune: bool = True) -> List[Choice]:
     """Feasible (technique, g) choices with total runtimes for one job.
+
+    ``profiles`` is either the legacy exhaustive dict or a
+    :class:`~repro.core.perfmodel.PerfModel` — with a model, choices are
+    evaluated straight off the throughput curves, so the MILP optimizes
+    over every count in the model's grid even though only the anchor
+    counts were actually profiled.  Enumeration goes through
+    ``iter_job_profiles`` so the solver sees exactly the grid the
+    policies see.
 
     prune=True drops Pareto-dominated choices (same or more GPUs, same or
     worse runtime) — a large constant-factor MILP size reduction that
     does not change the optimum.
     """
-    out = []
-    for (jname, tech, g), p in profiles.items():
-        if jname != job.name or not p.feasible:
-            continue
-        out.append(Choice(tech, g, p.step_time_s * job.total_steps))
+    from .perfmodel import iter_job_profiles
+    out = [Choice(tech, g, p.step_time_s * job.total_steps)
+           for tech, g, p in iter_job_profiles(profiles, job.name)
+           if p.feasible]
     if prune and out:
         out.sort(key=lambda c: (c.n_gpus, c.runtime_s))
         kept: List[Choice] = []

@@ -29,7 +29,7 @@ from ..models.transformer import model_spec
 from .hlo_analysis import analyze as analyze_hlo
 from ..parallelism.context import axis_rules
 from ..parallelism.shardings import param_shardings_from_rules
-from .mesh import (activation_rules, batch_axes, cache_shardings,
+from .mesh import (activation_rules, cache_shardings,
                    make_production_mesh, production_param_rules)
 
 

@@ -41,7 +41,6 @@ def main():
                                     save_checkpoint)
     from ..core.library import ParallelismLibrary
     from ..data.synthetic import SyntheticLM
-    from ..kernels.ops import kernel_opts
     from ..optim.adamw import AdamWConfig
     from ..parallelism.build import BuiltJob
 

@@ -13,9 +13,8 @@ execution + profiling) and by the launch/dryrun path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
-import numpy as np
 
 from ..models.config import ModelConfig
 

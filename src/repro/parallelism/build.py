@@ -4,7 +4,6 @@ executor (real runs) and reused by the launch path.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,7 @@ from ..train.steps import make_train_step
 from .base import Plan
 from .context import axis_rules
 from .pipeline import make_pipeline_loss
-from .shardings import (batch_shardings, make_mesh_from_plan,
+from .shardings import (make_mesh_from_plan,
                         opt_state_shardings, param_shardings)
 
 

@@ -8,7 +8,7 @@ from typing import Dict, Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from ..models.params import P, is_spec, logical_axes
+from ..models.params import P, is_spec
 from .base import Plan, largest_divisible_axis
 from .context import spec_for
 

@@ -4,7 +4,6 @@ implement offloading as full-remat — see DESIGN.md §5).
 """
 from __future__ import annotations
 
-from ..models.config import ModelConfig
 from .base import Plan, Technique
 
 

@@ -7,7 +7,6 @@ codec labels; VLM masks the patch prefix), AdamW update, MoE aux loss.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
@@ -16,7 +15,6 @@ import jax.numpy as jnp
 from ..models.config import ModelConfig
 from ..models.transformer import decode_step, forward
 from ..optim.adamw import AdamWConfig, adamw_update
-from ..parallelism.context import shard
 
 
 def _ce_from_logits(cfg: ModelConfig, logits, batch):

@@ -1,7 +1,5 @@
 """Parallelism Library registry, Trial Runner, checkpoint store, data
 pipeline, MoE routing properties."""
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -9,7 +7,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
-from repro.core.job import ClusterSpec, Job
+from repro.core.job import Job
 from repro.core.library import ParallelismLibrary
 from repro.core.profiler import HARDWARE, TrialRunner, collective_bytes_from_hlo
 from repro.parallelism.base import Plan, Technique
@@ -63,7 +61,9 @@ def test_profiler_napkin_monotonic_and_cached(tmp_path):
     p8 = runner.profile(job, "fsdp", 8)
     assert p8.step_time_s < p1.step_time_s, "more GPUs must model faster"
     assert p8.mem_per_device < p1.mem_per_device
-    # cache: second runner reads the same numbers from disk
+    # cache: second runner reads the same numbers from disk (flushes
+    # are batched now, so persist explicitly)
+    runner.flush()
     runner2 = TrialRunner(lib, HARDWARE["a100"],
                           cache_path=str(tmp_path / "cache.json"))
     assert runner2.profile(job, "fsdp", 8).step_time_s == p8.step_time_s

@@ -1,14 +1,13 @@
 """Simulator + policies: determinism, capacity, introspection wins, and
 the paper's qualitative policy ordering."""
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.baselines import (CurrentPractice, Optimus, OptimusDynamic,
                                   RandomPolicy, SaturnPolicy, SaturnStatic)
 from repro.core.executor import simulate
-from repro.core.job import ClusterSpec, Job, hpo_grid
+from repro.core.job import ClusterSpec, Job
 from repro.core.profiler import Profile
 
 CFG = get_config("xlstm-125m").reduced()

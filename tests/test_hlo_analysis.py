@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.hlo_analysis import (analyze, collective_details,
-                                       parse_computations, top_writers)
+from repro.launch.hlo_analysis import analyze
 
 
 def _compile(f, *specs):

@@ -1,6 +1,5 @@
 """Launch-layer units: production mesh/rules builders and the optimized
 preset (the beyond-paper sharding policy must stay well-formed)."""
-import jax
 import pytest
 
 from repro.configs import ARCH_IDS, get_config

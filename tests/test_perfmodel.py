@@ -1,0 +1,238 @@
+"""Performance-model layer: anchor selection, curve interpolation,
+feasibility boundaries, cache versioning/atomicity, and solver parity
+between interpolated and exhaustive profiles."""
+import json
+import math
+import os
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.job import ClusterSpec, Job
+from repro.core.library import ParallelismLibrary
+from repro.core.perfmodel import (PerfModel, ThroughputCurve,
+                                  iter_job_profiles, select_anchor_counts,
+                                  step_time_of)
+from repro.core.profiler import (CACHE_VERSION, HARDWARE, Profile,
+                                 TrialRunner)
+from repro.core.solver import choices_from_profiles, solve_joint
+
+CFG = get_config("xlstm-125m").reduced()
+
+
+def mk_curve(times, valid, domain, cap=1e12, mems=None):
+    anchors = {g: Profile("j", "ddp", g, t, (mems or {}).get(g, 1e9),
+                          (mems or {}).get(g, 1e9) <= cap, "test")
+               for g, t in times.items()}
+    return ThroughputCurve("j", "ddp", cap, anchors, valid, domain)
+
+
+# ----------------------------------------------------- anchor selection
+
+def test_anchor_selection_geometric_with_boundaries():
+    assert select_anchor_counts(range(1, 33)) == [1, 2, 4, 8, 16, 32]
+    # boundaries always kept, even off the geometric ladder
+    assert select_anchor_counts([3, 4, 5, 6, 7]) == [3, 6, 7]
+    assert select_anchor_counts([5]) == [5]
+    assert select_anchor_counts([]) == []
+    # a wider ratio profiles fewer counts
+    assert select_anchor_counts(range(1, 33), ratio=4.0) == [1, 4, 16, 32]
+
+
+def test_anchor_reduction_at_least_4x_on_dense_grid():
+    counts = list(range(1, 33))
+    anchors = select_anchor_counts(counts)
+    assert len(counts) / len(anchors) >= 4.0
+
+
+# ------------------------------------------------------- interpolation
+
+def test_interpolation_monotone_nonincreasing_between_anchors():
+    c = mk_curve({1: 10.0, 4: 3.5, 16: 1.2}, valid=range(1, 17),
+                 domain=range(1, 17))
+    prev = math.inf
+    for g in range(1, 17):
+        t = c.step_time(g)
+        assert t <= prev + 1e-12, f"step time increased at g={g}"
+        prev = t
+    # exact at anchors
+    assert c.step_time(4) == 3.5
+    assert c.profile(4).source == "test"
+    assert c.profile(5).source == "interpolated"
+
+
+def test_extrapolation_never_beats_perfect_scaling():
+    c = mk_curve({1: 10.0, 4: 3.0}, valid=range(1, 33), domain=range(1, 33))
+    t4, t32 = c.step_time(4), c.step_time(32)
+    assert t32 >= t4 * 4 / 32 - 1e-12
+    # below the anchored range: fewer GPUs can never be faster
+    assert c.step_time(1) >= c.step_time(4) - 1e-12
+
+
+def test_single_anchor_is_constant():
+    c = mk_curve({4: 2.0}, valid=range(1, 9), domain=range(1, 9))
+    assert c.step_time(2) == pytest.approx(2.0)
+    assert c.step_time(8) == pytest.approx(2.0)
+
+
+# -------------------------------------------------- feasibility limits
+
+def test_invalid_counts_report_infeasible():
+    c = mk_curve({2: 5.0, 8: 2.0}, valid=[2, 4, 8], domain=range(1, 17))
+    assert not c.feasible(1)          # outside search space
+    assert c.step_time(1) == math.inf
+    assert not c.feasible(12)         # in domain, not valid
+    assert c.feasible(4)              # interpolated, valid, fits memory
+    assert not c.valid_at(3)
+
+
+def test_memory_infeasible_counts():
+    # memory shrinks with g; counts below the fit threshold are flagged
+    cap = 3e9
+    c = mk_curve({1: 10.0, 8: 2.0}, valid=range(1, 9), domain=range(1, 9),
+                 cap=cap, mems={1: 8e9, 8: 1e9})
+    assert not c.feasible(1)
+    assert c.feasible(8)
+    # interpolated memory is monotone between the anchors, so there is
+    # one crossing point
+    flips = [c.feasible(g) for g in range(1, 9)]
+    assert flips == sorted(flips)
+
+
+# --------------------------------------------------- PerfModel mapping
+
+def _small_model(counts=(1, 2, 3, 4, 5, 6, 7, 8)):
+    lib = ParallelismLibrary()
+    runner = TrialRunner(lib, HARDWARE["a100"])
+    jobs = [Job("a", CFG, 8, 64, 200), Job("b", CFG, 8, 64, 300)]
+    pm = runner.profile_all(jobs, counts, mode="napkin",
+                            strategy="interpolate")
+    return jobs, pm, runner
+
+
+def test_perfmodel_mapping_contract():
+    jobs, pm, runner = _small_model()
+    assert isinstance(pm, PerfModel)
+    assert len(pm) > 0
+    # iteration yields only search-space-valid keys, and __getitem__
+    # synthesizes a Profile for each
+    for key in pm:
+        p = pm[key]
+        assert (p.job, p.technique, p.n_devices) == key
+    assert ("a", "ddp", 3) in pm
+    assert pm[("a", "ddp", 3)].source in ("interpolated", "napkin")
+    with pytest.raises(KeyError):
+        pm[("nope", "ddp", 2)]
+    # anchors are real trials; the rest interpolate for free
+    assert runner.trials == len(pm.anchor_keys())
+    assert len(pm) > len(pm.anchor_keys())
+
+
+def test_adapters_work_on_both_representations():
+    jobs, pm, _ = _small_model()
+    d = pm.to_dict()
+    trip_pm = sorted((t, g) for t, g, _ in iter_job_profiles(pm, "a"))
+    trip_d = sorted((t, g) for t, g, _ in iter_job_profiles(d, "a"))
+    assert trip_pm == trip_d
+    assert step_time_of(pm, "a", "ddp", 3) == \
+        step_time_of(d, "a", "ddp", 3)
+
+
+def test_simulate_runs_on_perfmodel():
+    from repro.core.baselines import CurrentPractice
+    from repro.core.executor import simulate
+    jobs, pm, _ = _small_model()
+    res = simulate(jobs, CurrentPractice(), pm,
+                   ClusterSpec(nodes=1, gpus_per_node=8), noise_sigma=0.1)
+    assert {g.job for g in res.gantt if g.kind == "run"} == {"a", "b"}
+
+
+# -------------------------------------------------------- cache safety
+
+def test_cache_version_mismatch_discarded(tmp_path):
+    path = str(tmp_path / "cache.json")
+    stale = [Profile("x", "ddp", 2, 1.0, 1e9, True, "napkin").to_json()]
+    # legacy bare-list schema
+    with open(path, "w") as f:
+        json.dump(stale, f)
+    r = TrialRunner(ParallelismLibrary(), HARDWARE["a100"], cache_path=path)
+    assert not r._cache
+    # wrong version number
+    with open(path, "w") as f:
+        json.dump({"version": CACHE_VERSION + 1, "profiles": stale}, f)
+    r = TrialRunner(ParallelismLibrary(), HARDWARE["a100"], cache_path=path)
+    assert not r._cache
+    # torn write / corrupt JSON must not raise
+    with open(path, "w") as f:
+        f.write('{"version": 2, "profiles": [{"job": "x", "tech')
+    r = TrialRunner(ParallelismLibrary(), HARDWARE["a100"], cache_path=path)
+    assert not r._cache
+    # records with unknown fields are skipped, not fatal
+    with open(path, "w") as f:
+        json.dump({"version": CACHE_VERSION,
+                   "profiles": [{"bogus": 1}] + stale}, f)
+    r = TrialRunner(ParallelismLibrary(), HARDWARE["a100"], cache_path=path)
+    assert len(r._cache) == 1
+
+
+def test_cache_roundtrip_and_batched_atomic_flush(tmp_path):
+    path = str(tmp_path / "cache.json")
+    lib = ParallelismLibrary()
+    job = Job("c", CFG, 8, 64, 100)
+    r = TrialRunner(lib, HARDWARE["a100"], cache_path=path, flush_every=3)
+    r.profile(job, "ddp", 1, mode="napkin")
+    r.profile(job, "ddp", 2, mode="napkin")
+    assert not os.path.exists(path), "flush must batch, not rewrite per call"
+    p4 = r.profile(job, "ddp", 4, mode="napkin")   # 3rd -> auto-flush
+    assert os.path.exists(path)
+    assert not [f for f in os.listdir(tmp_path) if ".tmp." in f], \
+        "atomic write must not leave temp files"
+    with open(path) as f:
+        data = json.load(f)
+    assert data["version"] == CACHE_VERSION
+    r2 = TrialRunner(lib, HARDWARE["a100"], cache_path=path)
+    assert r2.profile(job, "ddp", 4, mode="napkin").step_time_s == \
+        p4.step_time_s
+    assert r2.trials == 0, "cache hit must not rerun the trial"
+
+
+# ----------------------------------------------- solver on curves
+
+def test_solver_interpolated_close_to_exhaustive():
+    lib = ParallelismLibrary()
+    jobs = [Job(f"s{i}", CFG, 8, 64, 200 + 100 * i) for i in range(3)]
+    counts = list(range(1, 9))
+    hw = HARDWARE["a100"]
+    ex = TrialRunner(lib, hw).profile_all(jobs, counts, mode="napkin")
+    pm = TrialRunner(lib, hw).profile_all(jobs, counts, mode="napkin",
+                                          strategy="interpolate")
+    # curve-backed choices cover the same (tech, g) space
+    for j in jobs:
+        got = {(c.technique, c.n_gpus)
+               for c in choices_from_profiles(j, pm, prune=False)}
+        want = {(c.technique, c.n_gpus)
+                for c in choices_from_profiles(j, ex, prune=False)}
+        assert got == want
+    s_ex = solve_joint(jobs, ex, 8, n_slots=12, time_limit_s=5)
+    s_in = solve_joint(jobs, pm, 8, n_slots=12, time_limit_s=5)
+    assert s_in.makespan_s == pytest.approx(s_ex.makespan_s, rel=0.10)
+
+
+def test_napkin_curves_monotone_where_scaling_holds():
+    """Interpolated ddp step times inherit the napkin model's scaling:
+    wherever the anchors decrease, the curve between them decreases."""
+    _, pm, _ = _small_model()
+    for curve in pm.curves_for("a"):
+        anchors = sorted(curve.anchors)
+        for lo, hi in zip(anchors, anchors[1:]):
+            t_lo, t_hi = curve.step_time(lo), curve.step_time(hi)
+            if not (math.isfinite(t_lo) and math.isfinite(t_hi)):
+                continue
+            if t_lo >= t_hi:            # scaling holds on this segment
+                prev = t_lo
+                for g in range(lo, hi + 1):
+                    if not curve.valid_at(g):
+                        continue
+                    t = curve.step_time(g)
+                    assert t <= prev + 1e-12
+                    prev = t

@@ -10,7 +10,6 @@ from repro.core.executor import simulate, simulate_legacy
 from repro.core.job import ClusterSpec, Job
 from repro.core.placement import FlatPool, NodeAware, PlacementError
 from repro.core.profiler import Profile
-from repro.core.runtime import simulate_runtime
 from repro.core.schedule import Placement, Schedule, ScheduleEntry
 from repro.core.solver import solve_joint_nodes
 

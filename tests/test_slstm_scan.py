@@ -1,7 +1,6 @@
 """Batched-gradient sLSTM scan (custom VJP): forward and gradients must
 match the naive autodiff scan exactly (the §Perf pair-1 optimization)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

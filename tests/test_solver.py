@@ -1,16 +1,15 @@
 """Saturn Solver tests: MILP correctness + hypothesis property tests on
 schedule invariants (capacity, completeness, makespan bounds)."""
-import math
 
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
-from repro.core.job import ClusterSpec, Job
+from repro.core.job import Job
 from repro.core.profiler import Profile
-from repro.core.solver import (Choice, choices_from_profiles,
-                               greedy_schedule, solve_joint)
+from repro.core.solver import (choices_from_profiles, greedy_schedule,
+                               solve_joint)
 
 CFG = get_config("xlstm-125m").reduced()
 
