@@ -24,6 +24,8 @@ GATED_METRICS = (
     "makespan_exhaustive_s",
     "makespan_interpolated_s",
     "interp_err_median",
+    "makespan_aware_s",
+    "makespan_blind_s",
 )
 
 

@@ -8,8 +8,9 @@ roofline report for the dry-run deliverable.
 node-aware placement, offline vs online arrivals) and writes
 BENCH_schedule.json at the repo root; ``profile`` benchmarks the
 performance-model layer (anchor trials + interpolation vs exhaustive
-profiling) and writes BENCH_profile.json; ``--quick`` is the CI smoke
-variant.  Prints ``name,us_per_call,derived`` CSV rows (harness
+profiling) and writes BENCH_profile.json; ``hetero`` compares
+class-aware vs class-blind planning on a mixed A100+V100 fleet and
+writes BENCH_hetero.json; ``--quick`` is the CI smoke variant.  Prints ``name,us_per_call,derived`` CSV rows (harness
 contract) followed by human-readable tables.  Results also land in
 results/*.json.
 """
@@ -240,6 +241,145 @@ def bench_schedule(quick=False):
                 print(f"WARNING {key}: saturn ({sat.makespan_s:.0f}s) "
                       f"worse than current practice ({cp.makespan_s:.0f}s)")
     path = os.path.join(ROOT, "BENCH_schedule.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\nwrote {path}")
+    return out
+
+
+# ---------------------------------------------------- heterogeneous fleet
+
+def _hetero_workload(n_jobs=8, seed=0, slow_factor=2.5,
+                     counts=(1, 2, 4, 8)):
+    """Synthetic per-class profiles on a mixed A100-40GB + V100-16GB
+    fleet: every (job, tech, g) combo exists on both classes, the V100
+    copy ``slow_factor`` x slower — so a class-blind planner that
+    assumes reference-class speed everywhere pays a real price when its
+    jobs land on the slow pool."""
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.job import ClusterSpec, DeviceClass, Job
+    from repro.core.profiler import Profile
+
+    classes = (DeviceClass("a100-40g", nodes=1, gpus_per_node=8,
+                           hbm_per_gpu=40e9, speed_hint=1.0),
+               DeviceClass("v100-16g", nodes=1, gpus_per_node=8,
+                           hbm_per_gpu=16e9, speed_hint=1.0 / slow_factor))
+    cluster = ClusterSpec(restart_cost_s=30.0, device_classes=classes)
+    cfg = get_config("xlstm-125m").reduced()
+    rng = np.random.RandomState(seed)
+    jobs, profiles = [], {}
+    for i in range(n_jobs):
+        j = Job(f"j{i}", cfg, 8, 64, total_steps=int(rng.randint(150, 500)))
+        jobs.append(j)
+        base = rng.uniform(1.0, 4.0)
+        eff = rng.uniform(0.5, 0.95)
+        for dc, slow in (("a100-40g", 1.0), ("v100-16g", slow_factor)):
+            for g in counts:
+                for tech, mult in (("ddp", 1.0), ("fsdp", 1.1),
+                                   ("gpipe", 1.25)):
+                    profiles[(j.name, tech, dc, g)] = Profile(
+                        j.name, tech, g, base * mult * slow / g ** eff,
+                        1e9, True, "t", device_class=dc)
+    return cluster, jobs, profiles
+
+
+def bench_hetero(quick=False):
+    """Heterogeneous-cluster benchmark: class-AWARE joint planning (the
+    class-dimension MILP + class-pinned placement) vs class-BLIND
+    planning (the flat MILP on reference-class speeds, placement takes
+    whatever class has room) on a mixed A100+V100 fleet.  Both plans
+    execute against the same per-class ground-truth step times and the
+    same noise.  Writes BENCH_hetero.json (repo root)."""
+    from repro.core.baselines import CurrentPractice, SaturnPolicy
+    from repro.core.executor import simulate
+    from repro.core.job import Job
+    from repro.core.schedule import Schedule
+    from repro.core.solver import solve_joint
+
+    n_jobs = 8 if quick else 12
+    tl = 5 if quick else 15
+    cluster, jobs, profiles = _hetero_workload(n_jobs=n_jobs, seed=0)
+
+    # the class-blind planner's world view: every GPU runs at the best
+    # class's speed, one big pool — capped at the largest class so its
+    # plans remain placeable (no allocation can straddle classes)
+    gmax = max(dc.total_gpus for dc in cluster.device_classes)
+    blind_view = {}
+    for (jn, tech, dc, g), p in profiles.items():
+        if g > gmax:
+            continue
+        key = (jn, tech, g)
+        if key not in blind_view or \
+                p.step_time_s < blind_view[key].step_time_s:
+            blind_view[key] = p
+
+    class ClassBlindSaturn(SaturnPolicy):
+        name = "saturn-class-blind"
+
+        def plan(self, jobs_, remaining, _profiles, cluster_, current):
+            live = [Job(j.name, j.cfg, j.batch_size, j.seq_len,
+                        remaining.get(j.name, j.total_steps), j.lr, j.seed)
+                    for j in jobs_
+                    if remaining.get(j.name, j.total_steps) > 0]
+            if not live:
+                return Schedule([], solver=self.name)
+            sol = solve_joint(live, blind_view, cluster_.total_gpus,
+                              n_slots=self.n_slots,
+                              time_limit_s=self.time_limit_s, mip_gap=0.05)
+            return sol.to_schedule()
+
+    t0 = time.time()
+    aware = simulate(jobs, SaturnPolicy(n_slots=16, time_limit_s=tl),
+                     profiles, cluster, introspect_every_s=600,
+                     noise_sigma=0.1)
+    blind = simulate(jobs, ClassBlindSaturn(n_slots=16, time_limit_s=tl),
+                     profiles, cluster, introspect_every_s=600,
+                     noise_sigma=0.1)
+    cp = simulate(jobs, CurrentPractice(), profiles, cluster,
+                  noise_sigma=0.1)
+    wall = time.time() - t0
+
+    # migrations: restarts whose surrounding run segments changed class
+    runs_by_job = {}
+    for g in aware.gantt:
+        if g.kind == "run":
+            runs_by_job.setdefault(g.job, []).append(g)
+    migrations = 0
+    for segs in runs_by_job.values():
+        segs.sort(key=lambda g: g.start_s)
+        migrations += sum(1 for a, b in zip(segs, segs[1:])
+                          if a.device_class != b.device_class)
+
+    out = {
+        "quick": quick,
+        "jobs": n_jobs,
+        "classes": {dc.name: {"gpus": dc.total_gpus,
+                              "speed_hint": dc.speed_hint}
+                    for dc in cluster.device_classes},
+        "makespan_aware_s": aware.makespan_s,
+        "makespan_blind_s": blind.makespan_s,
+        "current_practice_s": cp.makespan_s,
+        "aware_vs_blind_speedup": blind.makespan_s / aware.makespan_s,
+        "aware_replans": aware.replans,
+        "aware_restarts": aware.restarts,
+        "aware_class_migrations": migrations,
+        "blind_restarts": blind.restarts,
+        "bench_wall_s": wall,
+    }
+    emit("hetero_aware_vs_blind", wall * 1e6,
+         f"aware={aware.makespan_s:.0f}s blind={blind.makespan_s:.0f}s "
+         f"cp={cp.makespan_s:.0f}s "
+         f"speedup={out['aware_vs_blind_speedup']:.2f}x "
+         f"migrations={migrations}")
+    # acceptance gate (ISSUE 3): class-aware planning must beat
+    # class-blind planning on the mixed fleet.  (Per-class GPU-second
+    # conservation is enforced inside the runtime for every run above.)
+    assert aware.makespan_s < blind.makespan_s, \
+        f"class-aware ({aware.makespan_s:.0f}s) did not beat " \
+        f"class-blind ({blind.makespan_s:.0f}s)"
+    path = os.path.join(ROOT, "BENCH_hetero.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
     print(f"\nwrote {path}")
@@ -591,7 +731,7 @@ def main() -> None:
     ap.add_argument("which", nargs="?", default="all",
                     choices=["all", "roofline", "kernels", "solver",
                              "introspection", "table2", "schedule",
-                             "profile"])
+                             "profile", "hetero"])
     ap.add_argument("--quick", action="store_true",
                     help="reduced workloads (CI smoke job)")
     args = ap.parse_args()
@@ -607,6 +747,8 @@ def main() -> None:
         bench_schedule(quick=args.quick)
     if which in ("profile", "all"):
         bench_profile(quick=args.quick)
+    if which in ("hetero", "all"):
+        bench_hetero(quick=args.quick)
     if which in ("introspection", "all"):
         bench_introspection()
     if which in ("table2", "all"):

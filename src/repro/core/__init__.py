@@ -17,8 +17,8 @@ Layering (each layer only imports downward):
     api.py        SaturnSession facade
 """
 from .api import SaturnSession                              # noqa: F401
-from .job import ClusterSpec, Job, hpo_grid                 # noqa: F401
+from .job import ClusterSpec, DeviceClass, Job, hpo_grid    # noqa: F401
 from .perfmodel import PerfModel, ThroughputCurve, select_anchor_counts  # noqa: F401
-from .placement import FlatPool, NodeAware, make_backend    # noqa: F401
+from .placement import ClassPool, FlatPool, NodeAware, make_backend  # noqa: F401
 from .runtime import SimResult, simulate_runtime            # noqa: F401
 from .schedule import Placement, Policy, Schedule, ScheduleEntry  # noqa: F401

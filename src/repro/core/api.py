@@ -33,6 +33,10 @@ class SaturnSession:
         self.cluster = cluster
         self.library = ParallelismLibrary()
         self.runner = TrialRunner(self.library, hardware, cache_path)
+        # mixed fleets: derive per-class hardware (speed_hint-scaled
+        # rates, per-class HBM) so trials land at realistic speeds
+        for dc in cluster.device_classes:
+            self.runner.register_class(dc)
         self.jobs: List[Job] = []
         # a PerfModel (strategy="interpolate") or legacy profile dict
         self.profiles = {}
@@ -68,8 +72,13 @@ class SaturnSession:
     def gpu_counts(self, dense: bool = False):
         """Candidate GPU counts: the geometric ladder (what gets real
         trials), or with ``dense`` every count 1..G (what the
-        performance model evaluates for free)."""
-        g = self.cluster.total_gpus
+        performance model evaluates for free).  On heterogeneous
+        clusters G is the LARGEST class (a single allocation never
+        straddles classes); profiling truncates per class."""
+        if self.cluster.hetero:
+            g = max(dc.total_gpus for dc in self.cluster.device_classes)
+        else:
+            g = self.cluster.total_gpus
         if dense:
             return list(range(1, g + 1))
         counts, c = [], 1
@@ -98,7 +107,9 @@ class SaturnSession:
         """
         self.profiles = self.runner.profile_all(
             self.jobs, self.gpu_counts(dense=(strategy == "interpolate")),
-            mode=mode, strategy=strategy, workers=workers)
+            mode=mode, strategy=strategy, workers=workers,
+            classes=(self.cluster.device_classes if self.cluster.hetero
+                     else None))
         return self.profiles
 
     # ------------------------------------------------------ Solver + exec

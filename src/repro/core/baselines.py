@@ -7,50 +7,114 @@
 - Optimus-Dynamic: Optimus + the introspection mechanism.
 - Saturn: the joint MILP (+ introspection); under a node-aware cluster
   (``ClusterSpec(placement="node")``) it runs the node-locality MILP
-  and emits node placement hints the runtime honors.
+  and emits node placement hints the runtime honors; on a heterogeneous
+  cluster (multiple :class:`~repro.core.job.DeviceClass`) it runs the
+  class-aware MILP and pins each job to a device class.
 
-All policies emit Schedule IR (:class:`repro.core.schedule.Schedule`).
+All policies emit Schedule IR (:class:`repro.core.schedule.Schedule`)
+and are device-class aware: on heterogeneous clusters their entries are
+class-qualified, on legacy single-class clusters they reduce exactly to
+the historical behavior.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 
 from .job import Job
-from .perfmodel import iter_job_profiles
+from .perfmodel import iter_job_class_profiles, iter_job_profiles
 from .schedule import Policy, Schedule, ScheduleEntry
-from .solver import solve_joint, solve_joint_nodes
+from .solver import solve_joint, solve_joint_classes, solve_joint_nodes
 
 
-def _feasible(job, profiles):
-    """Feasible (technique, g, step_time) triples for one job — from
-    the legacy dict or straight off a PerfModel's curves."""
+def _is_hetero(cluster) -> bool:
+    return getattr(cluster, "hetero", False)
+
+
+def _feasible(job, profiles, device_class=None):
+    """Feasible (technique, g, step_time) triples for one job on one
+    device class — from the legacy dict or a PerfModel's curves."""
     return [(tech, g, p.step_time_s)
-            for tech, g, p in iter_job_profiles(profiles, job.name)
+            for tech, g, p in iter_job_profiles(profiles, job.name,
+                                                device_class=device_class)
             if p.feasible]
 
 
-def _best_at_count(job, profiles, g):
+def _feasible_classes(job, profiles):
+    """Feasible (technique, device_class, g, step_time) across every
+    class the profiles cover."""
+    return [(tech, dc, g, p.step_time_s)
+            for tech, dc, g, p in iter_job_class_profiles(profiles,
+                                                          job.name)
+            if p.feasible]
+
+
+def _best_at_count(job, profiles, g, device_class=None):
     cands = [(tech, p.step_time_s)
-             for tech, gg, p in iter_job_profiles(profiles, job.name)
+             for tech, gg, p in iter_job_profiles(profiles, job.name,
+                                                  device_class=device_class)
              if gg == g and p.feasible]
     if not cands:
         return None
     return min(cands, key=lambda x: x[1])
 
 
+def _cluster_nodes(cluster) -> List[Tuple]:
+    """Every (device_class, gpus_per_node) node in the cluster, in
+    declaration order — what "one job per node" task parallelism
+    round-robins over."""
+    out = []
+    for dc in cluster.device_classes:
+        out.extend([(dc.name, dc.gpus_per_node)] * dc.nodes)
+    return out
+
+
 class CurrentPractice(Policy):
     """Typical current practice (paper §3): every job gets a full node
     and runs under the standard go-to setup — FSDP — one job per node at
     a time, task-parallel across nodes.  (No per-job tuning: that is
-    exactly what Saturn automates.)"""
+    exactly what Saturn automates.)  On a mixed fleet, jobs take whole
+    nodes round-robin across ALL nodes regardless of generation — the
+    class-blind behavior Saturn's class-aware planning beats."""
 
     name = "current-practice"
     dynamic = False
     default_technique = "fsdp"
 
+    def _entry_for(self, j, profiles, g, dclass):
+        """Full-node entry on one class: default technique if feasible
+        there, else the best feasible technique at that count."""
+        cands = {tech: p.step_time_s
+                 for tech, gg, p in iter_job_profiles(profiles, j.name,
+                                                      device_class=dclass)
+                 if gg == g and p.feasible}
+        if cands:
+            tech = self.default_technique if self.default_technique \
+                in cands else min(cands, key=cands.get)
+            return ScheduleEntry(j.name, tech, g, device_class=dclass)
+        # fall back to any feasible config on this class
+        feas = _feasible(j, profiles, device_class=dclass)
+        if not feas:
+            return None
+        tech, g, _ = min(feas, key=lambda x: x[2])
+        return ScheduleEntry(j.name, tech, g, device_class=dclass)
+
     def plan(self, jobs, remaining, profiles, cluster, current):
+        if _is_hetero(cluster):
+            nodes = _cluster_nodes(cluster)
+            entries = []
+            for i, j in enumerate(jobs):
+                dclass, g = nodes[i % len(nodes)]
+                e = self._entry_for(j, profiles, g, dclass)
+                if e is None:  # does not fit this node class: any class
+                    feas = _feasible_classes(j, profiles)
+                    if not feas:
+                        raise ValueError(f"{j.name}: infeasible everywhere")
+                    tech, dc, g, _ = min(feas, key=lambda x: x[3])
+                    e = ScheduleEntry(j.name, tech, g, device_class=dc)
+                entries.append(e)
+            return Schedule(entries, solver=self.name)
         entries = []
         for j in jobs:
             g = cluster.gpus_per_node
@@ -76,8 +140,13 @@ class CurrentPracticeTuned(CurrentPractice):
     from its parallelism-selection gains)."""
 
     name = "current-practice-tuned"
+    # the per-job best technique: never prefer the go-to default
+    default_technique = ""
 
     def plan(self, jobs, remaining, profiles, cluster, current):
+        if _is_hetero(cluster):
+            return super().plan(jobs, remaining, profiles, cluster,
+                                current)
         entries = []
         for j in jobs:
             g = cluster.gpus_per_node
@@ -102,6 +171,15 @@ class RandomPolicy(Policy):
 
     def plan(self, jobs, remaining, profiles, cluster, current):
         rng = np.random.RandomState(self.seed)
+        if _is_hetero(cluster):
+            entries = []
+            for j in jobs:
+                feas = _feasible_classes(j, profiles)
+                tech, dc, g, _ = feas[rng.randint(len(feas))]
+                entries.append(ScheduleEntry(j.name, tech, g,
+                                             device_class=dc))
+            rng.shuffle(entries)
+            return Schedule(entries, solver=self.name)
         order = []
         for j in jobs:
             feas = _feasible(j, profiles)
@@ -114,12 +192,22 @@ class RandomPolicy(Policy):
 class Optimus(Policy):
     """Greedy marginal-gain allocation: every job starts at its smallest
     feasible GPU count; remaining GPUs go one-at-a-time to the job with
-    the largest estimated marginal runtime reduction."""
+    the largest estimated marginal runtime reduction.
+
+    On a heterogeneous cluster the allocation key is (device_class, g)
+    and each class has its own GPU budget: jobs start on their cheapest
+    feasible start, and the marginal-gain loop may grow a job within its
+    class OR move it to a strictly faster budget-feasible config on
+    another class — so both pools get spent.  (Migrating an already
+    RUNNING job across classes remains Saturn's introspection edge.)
+    """
 
     name = "optimus"
     dynamic = False
 
     def plan(self, jobs, remaining, profiles, cluster, current):
+        if _is_hetero(cluster):
+            return self._plan_hetero(jobs, remaining, profiles, cluster)
         live = [j for j in jobs if remaining.get(j.name, 0) > 0]
         runtime_at: Dict[str, Dict[int, Tuple[str, float]]] = {}
         for j in live:
@@ -169,6 +257,73 @@ class Optimus(Policy):
                 order.append((j.name, runtime_at[j.name][gmin][0], gmin))
         return Schedule.from_tuples(order, solver=self.name)
 
+    def _plan_hetero(self, jobs, remaining, profiles, cluster):
+        live = [j for j in jobs if remaining.get(j.name, 0) > 0]
+        # runtime_at[job][(class, g)] = (technique, est total runtime)
+        runtime_at: Dict[str, Dict[Tuple[str, int], Tuple[str, float]]] = {}
+        for j in live:
+            per_cg: Dict[Tuple[str, int], Tuple[str, float]] = {}
+            for tech, dc, g, p in iter_job_class_profiles(profiles, j.name):
+                if not p.feasible:
+                    continue
+                t = p.step_time_s * remaining[j.name]
+                key = (dc, g)
+                if key not in per_cg or t < per_cg[key][1]:
+                    per_cg[key] = (tech, t)
+            runtime_at[j.name] = per_cg
+        budgets = {dc.name: dc.total_gpus for dc in cluster.device_classes}
+        alloc: Dict[str, Tuple[str, int]] = {}
+        for j in sorted(live, key=lambda j: -remaining.get(j.name, 0)):
+            # cheapest feasible start: fewest GPUs, fastest class on ties
+            starts = sorted(runtime_at[j.name],
+                            key=lambda cg: (cg[1],
+                                            runtime_at[j.name][cg][1]))
+            for dc, g in starts:
+                if g <= budgets[dc]:
+                    alloc[j.name] = (dc, g)
+                    budgets[dc] -= g
+                    break
+        improved = True
+        while improved:
+            improved = False
+            best_gain, best_job, best_key = 0.0, None, None
+            for jname, (dc, g) in alloc.items():
+                per_cg = runtime_at[jname]
+                cur_rt = per_cg[(dc, g)][1]
+                for (dc2, g2), (_, rt2) in per_cg.items():
+                    if rt2 >= cur_rt - 1e-12:
+                        continue      # only strictly faster configs
+                    back = g if dc2 == dc else 0   # GPUs given back
+                    if g2 > budgets[dc2] + back:
+                        continue
+                    gain = (cur_rt - rt2) / max(g2 - back, 1)
+                    if gain > best_gain:
+                        best_gain, best_job = gain, jname
+                        best_key = (dc2, g2)
+            if best_job is not None:
+                dc, g = alloc[best_job]
+                dc2, g2 = best_key
+                budgets[dc] += g
+                budgets[dc2] -= g2
+                alloc[best_job] = best_key
+                improved = True
+        entries = []
+        for j in live:
+            if j.name in alloc:
+                dc, g = alloc[j.name]
+                entries.append(ScheduleEntry(
+                    j.name, runtime_at[j.name][(dc, g)][0], g,
+                    device_class=dc))
+        for j in live:  # unallocated: queue behind on cheapest start
+            if j.name not in alloc and runtime_at[j.name]:
+                dc, g = min(runtime_at[j.name],
+                            key=lambda cg: (cg[1],
+                                            runtime_at[j.name][cg][1]))
+                entries.append(ScheduleEntry(
+                    j.name, runtime_at[j.name][(dc, g)][0], g,
+                    device_class=dc))
+        return Schedule(entries, solver=self.name)
+
 
 class OptimusDynamic(Optimus):
     name = "optimus-dynamic"
@@ -180,8 +335,10 @@ class SaturnPolicy(Policy):
     introspection intervals / arrivals on observed remaining work.
 
     On a node-aware cluster (``cluster.placement == "node"``) the plan
-    comes from ``solve_joint_nodes`` and carries node assignments, so
-    the runtime's placement honors node locality end to end.
+    comes from ``solve_joint_nodes`` and carries node assignments; on a
+    heterogeneous cluster it comes from ``solve_joint_classes`` and
+    pins each job to a device class — so an introspection replan may
+    migrate a job across classes, paying the real restart penalty.
     """
 
     name = "saturn"
@@ -201,7 +358,11 @@ class SaturnPolicy(Policy):
                                 rem, j.lr, j.seed))
         if not live:
             return Schedule([], solver=self.name)
-        if getattr(cluster, "placement", "flat") == "node":
+        if _is_hetero(cluster):
+            sol = solve_joint_classes(
+                live, profiles, cluster, n_slots=min(self.n_slots, 20),
+                time_limit_s=self.time_limit_s, mip_gap=0.05)
+        elif getattr(cluster, "placement", "flat") == "node":
             sol = solve_joint_nodes(
                 live, profiles, cluster.nodes, cluster.gpus_per_node,
                 n_slots=min(self.n_slots, 16),

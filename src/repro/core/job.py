@@ -29,19 +29,99 @@ class Job:
                            total_steps=self.total_steps)
 
 
+DEFAULT_CLASS = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceClass:
+    """One homogeneous slice of a (possibly mixed) cluster: a device
+    generation / memory size, e.g. A100-40GB vs V100-16GB.
+
+    ``speed_hint`` is the relative throughput vs the cluster's reference
+    hardware (1.0 = reference): the profiler scales its roofline
+    constants by it, so per-class trials land at realistic speeds even
+    in the analytic/napkin backends.
+    """
+    name: str
+    nodes: int = 1
+    gpus_per_node: int = 8
+    hbm_per_gpu: float = 40e9       # bytes
+    speed_hint: float = 1.0         # relative throughput vs reference
+
+    @property
+    def total_gpus(self) -> int:
+        return self.nodes * self.gpus_per_node
+
+
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:
     """The GPU cluster: the paper evaluates 1 and 2 p4d.24xlarge nodes
-    (8 GPUs each); the TPU adaptation treats a "node" as an ICI slice."""
+    (8 GPUs each); the TPU adaptation treats a "node" as an ICI slice.
+
+    Heterogeneous fleets pass ``device_classes`` — a tuple of
+    :class:`DeviceClass` records (mixed generations / memory sizes).
+    The legacy single-class constructor (``nodes`` x ``gpus_per_node``)
+    is kept as a shim: it synthesizes one "default" class, and every
+    class-aware code path reduces to the historical behavior.  When
+    ``device_classes`` is given it is authoritative: the legacy fields
+    are ignored and ``total_gpus`` sums over the classes.
+    """
     nodes: int = 1
     gpus_per_node: int = 8
     hbm_per_gpu: float = 40e9       # bytes (A100-40GB on p4d.24xlarge)
     restart_cost_s: float = 30.0    # checkpoint + relaunch penalty
     placement: str = "flat"         # runtime placement backend: flat | node
+    device_classes: tuple = ()      # Tuple[DeviceClass, ...]; () = legacy
+
+    def __post_init__(self):
+        if not self.device_classes:
+            object.__setattr__(self, "device_classes", (DeviceClass(
+                DEFAULT_CLASS, self.nodes, self.gpus_per_node,
+                self.hbm_per_gpu),))
+        else:
+            object.__setattr__(self, "device_classes",
+                               tuple(self.device_classes))
+        names = [dc.name for dc in self.device_classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate device-class names: {names}")
+
+    @property
+    def hetero(self) -> bool:
+        """Class-aware paths required: more than one device class, or a
+        single EXPLICIT class (anything not named "default" — the shim's
+        synthesized class).  A lone explicit class still needs its own
+        hardware constants (speed_hint, hbm_per_gpu) honored end to end;
+        only the legacy shim reduces to the historical single-pool
+        behavior."""
+        return len(self.device_classes) > 1 or \
+            self.device_classes[0].name != DEFAULT_CLASS
 
     @property
     def total_gpus(self) -> int:
-        return self.nodes * self.gpus_per_node
+        return sum(dc.total_gpus for dc in self.device_classes)
+
+    def class_named(self, name: str) -> DeviceClass:
+        for dc in self.device_classes:
+            if dc.name == name:
+                return dc
+        raise KeyError(f"no device class {name!r} "
+                       f"(have {[d.name for d in self.device_classes]})")
+
+    def device_ranges(self):
+        """Contiguous global device-id range per class, in declaration
+        order: ``{class_name: (start, stop)}``."""
+        out, off = {}, 0
+        for dc in self.device_classes:
+            out[dc.name] = (off, off + dc.total_gpus)
+            off += dc.total_gpus
+        return out
+
+    def class_of_device(self, device: int) -> str:
+        for name, (lo, hi) in self.device_ranges().items():
+            if lo <= device < hi:
+                return name
+        raise KeyError(f"device {device} outside cluster "
+                       f"(total {self.total_gpus})")
 
 
 def hpo_grid(models, lrs, batch_sizes, *, seq_len: int, total_steps: int,

@@ -37,6 +37,7 @@ from typing import Dict, Iterable, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from .job import DEFAULT_CLASS
 from .profiler import Profile
 
 # Extrapolation slope clamp in log-log space: -1 is perfect linear
@@ -86,15 +87,18 @@ def _loglog_eval(lxs: np.ndarray, lys: np.ndarray, g: float) -> float:
 
 
 class ThroughputCurve:
-    """One ⟨job, technique⟩ scaling curve over GPU count, fit to real
-    trial anchors."""
+    """One ⟨job, technique, device class⟩ scaling curve over GPU count,
+    fit to real trial anchors.  On heterogeneous clusters every device
+    class gets its own curve (own anchors, own HBM capacity)."""
 
     def __init__(self, job: str, technique: str, hbm_capacity: float,
                  anchors: Dict[int, Profile],
-                 valid: Iterable[int], domain: Iterable[int]):
+                 valid: Iterable[int], domain: Iterable[int],
+                 device_class: str = DEFAULT_CLASS):
         self.job = job
         self.technique = technique
         self.hbm_capacity = hbm_capacity
+        self.device_class = device_class
         self.anchors = {int(g): p for g, p in sorted(anchors.items())}
         self.valid = frozenset(int(g) for g in valid)
         self.domain = frozenset(int(g) for g in domain)
@@ -160,108 +164,218 @@ class ThroughputCurve:
         terms = {"n_anchors": float(len(self._fit_counts))}
         if not self.valid_at(g) or not self._fit_counts:
             return Profile(self.job, self.technique, g, float("inf"),
-                           float("inf"), False, "interpolated", terms)
+                           float("inf"), False, "interpolated", terms,
+                           device_class=self.device_class)
         t = _loglog_eval(self._lg, self._lt, g)
         m = _loglog_eval(self._lg, self._lm, g)
         feas = math.isfinite(t) and math.isfinite(m) and \
             m <= self.hbm_capacity
         return Profile(self.job, self.technique, g, t, m, feas,
-                       "interpolated", terms)
+                       "interpolated", terms,
+                       device_class=self.device_class)
 
 
 class PerfModel(Mapping):
     """Curves for a whole workload, with the legacy Mapping contract.
 
-    Iteration / ``len`` / ``items()`` enumerate ``(job, technique, g)``
-    over the model's count grid restricted to search-space-valid counts
-    — exactly the keys an exhaustive ``profile_all`` dict would hold —
-    so every dict-shaped consumer (the MILPs, baselines, the runtime's
-    noise model) works unchanged.  ``__getitem__`` additionally accepts
-    off-grid counts: curves are continuous, so introspection replans may
-    evaluate counts nobody profiled.
+    Single-class models: iteration / ``len`` / ``items()`` enumerate
+    ``(job, technique, g)`` over the model's count grid restricted to
+    search-space-valid counts — exactly the keys an exhaustive
+    ``profile_all`` dict would hold — so every dict-shaped consumer (the
+    MILPs, baselines, the runtime's noise model) works unchanged.
+    ``__getitem__`` additionally accepts off-grid counts: curves are
+    continuous, so introspection replans may evaluate counts nobody
+    profiled.
+
+    Heterogeneous models (curves keyed ``(job, tech, device_class)``)
+    enumerate 4-tuple keys ``(job, tech, device_class, g)`` over each
+    class's own count grid; 3-tuple lookups resolve against the
+    "default" class only, so class-blind code cannot silently read the
+    wrong device generation.
     """
 
-    def __init__(self, curves: Dict[Tuple[str, str], ThroughputCurve],
-                 counts: Iterable[int]):
-        self._curves = dict(curves)
+    def __init__(self, curves: Dict[Tuple, ThroughputCurve],
+                 counts: Iterable[int],
+                 counts_by_class: Optional[Dict[str, Iterable[int]]] = None):
+        self._curves: Dict[Tuple[str, str, str], ThroughputCurve] = {}
+        for k, c in curves.items():
+            if len(k) == 2:
+                k = (k[0], k[1], getattr(c, "device_class", DEFAULT_CLASS))
+            self._curves[k] = c
+        self.classes = sorted({k[2] for k in self._curves}) or \
+            [DEFAULT_CLASS]
+        self.hetero = self.classes != [DEFAULT_CLASS]
         self.counts = sorted(set(int(c) for c in counts))
-        self._keys = [(j, t, g) for (j, t), c in self._curves.items()
-                      for g in self.counts if g in c.valid]
+        self._counts_by_class = {
+            dc: sorted(set(int(c) for c in cs))
+            for dc, cs in (counts_by_class or {}).items()}
+        for dc in self.classes:
+            self._counts_by_class.setdefault(dc, self.counts)
+        if self.hetero:
+            self._keys = [(j, t, dc, g)
+                          for (j, t, dc), c in self._curves.items()
+                          for g in self._counts_by_class[dc]
+                          if g in c.valid]
+        else:
+            self._keys = [(j, t, g)
+                          for (j, t, dc), c in self._curves.items()
+                          for g in self._counts_by_class[dc]
+                          if g in c.valid]
+
+    def counts_for(self, device_class: str = DEFAULT_CLASS) -> List[int]:
+        return self._counts_by_class.get(device_class, self.counts)
 
     # --------------------------------------------------- Mapping contract
-    def __getitem__(self, key: Tuple[str, str, int]) -> Profile:
-        job, tech, g = key
-        c = self._curves.get((job, tech))
+    def __getitem__(self, key: Tuple) -> Profile:
+        if len(key) == 4:
+            job, tech, dc, g = key
+        elif len(key) == 3:
+            (job, tech, g), dc = key, DEFAULT_CLASS
+        else:
+            raise KeyError(key)
+        c = self._curves.get((job, tech, dc))
         if c is None:
             raise KeyError(key)
         return c.profile(int(g))
 
-    def __iter__(self) -> Iterator[Tuple[str, str, int]]:
+    def __iter__(self) -> Iterator[Tuple]:
         return iter(self._keys)
 
     def __len__(self) -> int:
         return len(self._keys)
 
     # ----------------------------------------------------- curve access
-    def curve(self, job: str, technique: str) -> ThroughputCurve:
-        return self._curves[(job, technique)]
+    def curve(self, job: str, technique: str,
+              device_class: str = DEFAULT_CLASS) -> ThroughputCurve:
+        return self._curves[(job, technique, device_class)]
 
-    def curves_for(self, job: str) -> List[ThroughputCurve]:
-        return [c for (j, _), c in self._curves.items() if j == job]
+    def curves_for(self, job: str,
+                   device_class: Optional[str] = None
+                   ) -> List[ThroughputCurve]:
+        """All curves for one job; ``device_class`` filters to one
+        class (single-class models hold everything under "default")."""
+        return [c for (j, _, dc), c in self._curves.items()
+                if j == job and (device_class is None
+                                 or dc == device_class)]
 
-    def step_time(self, job: str, technique: str, g: int) -> float:
-        return self._curves[(job, technique)].step_time(g)
+    def step_time(self, job: str, technique: str, g: int,
+                  device_class: str = DEFAULT_CLASS) -> float:
+        return self._curves[(job, technique, device_class)].step_time(g)
 
-    def mem(self, job: str, technique: str, g: int) -> float:
-        return self._curves[(job, technique)].mem(g)
+    def mem(self, job: str, technique: str, g: int,
+            device_class: str = DEFAULT_CLASS) -> float:
+        return self._curves[(job, technique, device_class)].mem(g)
 
-    def feasible(self, job: str, technique: str, g: int) -> bool:
-        c = self._curves.get((job, technique))
+    def feasible(self, job: str, technique: str, g: int,
+                 device_class: str = DEFAULT_CLASS) -> bool:
+        c = self._curves.get((job, technique, device_class))
         return c.feasible(g) if c is not None else False
 
     # ------------------------------------------------------------ stats
     def anchor_keys(self) -> set:
-        """The (job, technique, g) combos backed by real trials."""
+        """The combos backed by real trials: (job, technique, g) on
+        single-class models, (job, technique, device_class, g) on
+        heterogeneous ones — matching the Mapping key shape."""
+        if self.hetero:
+            return {(c.job, c.technique, dc, g)
+                    for (_, _, dc), c in self._curves.items()
+                    for g in c.anchors}
         return {(c.job, c.technique, g)
                 for c in self._curves.values() for g in c.anchors}
 
     def n_anchors(self) -> int:
         return sum(len(c.anchors) for c in self._curves.values())
 
-    def to_dict(self) -> Dict[Tuple[str, str, int], Profile]:
+    def to_dict(self) -> Dict[Tuple, Profile]:
         """Materialize the full grid as a plain dict (legacy export)."""
         return {k: self[k] for k in self._keys}
 
 
 # ------------------------------------------------- dict/model adapters
+#
+# Legacy dicts come in two shapes: 3-tuple keys (job, tech, g) for
+# single-class clusters and 4-tuple keys (job, tech, device_class, g)
+# for heterogeneous ones.  The adapters below accept both, plus
+# PerfModels, so planners/runtime never branch on the representation.
 
-def iter_job_profiles(profiles, job_name: str
-                      ) -> Iterator[Tuple[str, int, Profile]]:
-    """Yield (technique, g, Profile) for one job from either a legacy
-    profile dict or a :class:`PerfModel`."""
+def _dict_key(profiles, job: str, tech: str, g: int,
+              device_class: Optional[str]) -> Tuple:
+    """The key under which a plain dict holds this combo."""
+    dc = device_class or DEFAULT_CLASS
+    k4 = (job, tech, dc, g)
+    if k4 in profiles:
+        return k4
+    return (job, tech, g)
+
+
+def profile_key(profiles, job: str, tech: str, g: int,
+                device_class: Optional[str] = None) -> Tuple:
+    """The exact key ``profiles`` uses for this combo — the key the
+    runtime's noise model is seeded under."""
     if isinstance(profiles, PerfModel):
-        for curve in profiles.curves_for(job_name):
-            for g in profiles.counts:
+        dc = device_class or DEFAULT_CLASS
+        return (job, tech, dc, g) if profiles.hetero else (job, tech, g)
+    return _dict_key(profiles, job, tech, g, device_class)
+
+
+def iter_job_profiles(profiles, job_name: str,
+                      device_class: Optional[str] = None
+                      ) -> Iterator[Tuple[str, int, Profile]]:
+    """Yield (technique, g, Profile) for one job on ONE device class
+    (default: the "default" class) from either a profile dict or a
+    :class:`PerfModel`."""
+    dc = device_class or DEFAULT_CLASS
+    if isinstance(profiles, PerfModel):
+        for curve in profiles.curves_for(job_name, device_class=dc):
+            for g in profiles.counts_for(dc):
                 if g in curve.valid:
                     yield curve.technique, g, curve.profile(g)
         return
-    for (jn, tech, g), p in profiles.items():
+    for key, p in profiles.items():
+        if len(key) == 4:
+            jn, tech, kdc, g = key
+            if jn == job_name and kdc == dc:
+                yield tech, g, p
+        else:
+            jn, tech, g = key
+            if jn == job_name and dc == DEFAULT_CLASS:
+                yield tech, g, p
+
+
+def iter_job_class_profiles(profiles, job_name: str
+                            ) -> Iterator[Tuple[str, str, int, Profile]]:
+    """Yield (technique, device_class, g, Profile) for one job across
+    EVERY device class the profiles cover."""
+    if isinstance(profiles, PerfModel):
+        for dc in profiles.classes:
+            for tech, g, p in iter_job_profiles(profiles, job_name, dc):
+                yield tech, dc, g, p
+        return
+    for key, p in profiles.items():
+        if len(key) == 4:
+            jn, tech, dc, g = key
+        else:
+            (jn, tech, g), dc = key, DEFAULT_CLASS
         if jn == job_name:
-            yield tech, g, p
+            yield tech, dc, g, p
 
 
-def step_time_of(profiles, job: str, tech: str, g: int) -> float:
+def step_time_of(profiles, job: str, tech: str, g: int,
+                 device_class: Optional[str] = None) -> float:
     """Estimated step time from either representation; curve-backed
     models answer at any count, dicts only at profiled ones."""
     if isinstance(profiles, PerfModel):
-        return profiles.step_time(job, tech, g)
-    return profiles[(job, tech, g)].step_time_s
+        return profiles.step_time(job, tech, g,
+                                  device_class or DEFAULT_CLASS)
+    return profiles[_dict_key(profiles, job, tech, g,
+                              device_class)].step_time_s
 
 
-def lookup_profile(profiles, job: str, tech: str, g: int
+def lookup_profile(profiles, job: str, tech: str, g: int,
+                   device_class: Optional[str] = None
                    ) -> Optional[Profile]:
     """Profile record from either representation (None if unknown)."""
     try:
-        return profiles[(job, tech, g)]
+        return profiles[profile_key(profiles, job, tech, g, device_class)]
     except KeyError:
         return None

@@ -10,14 +10,20 @@ decides *which* ones, and thereby which co-locations are legal:
   free capacity; larger configs must be whole-node multiples and take
   entirely free nodes.  Two 5-GPU jobs can therefore never share one
   8-GPU node.
+- :class:`ClassPool` — heterogeneous clusters: one free pool PER device
+  class over contiguous global-id ranges.  A class-pinned request
+  (``device_class=...``) only draws from that class; an unpinned
+  (class-blind) request takes the first class with room, in declaration
+  order.  A single allocation never straddles classes.
 
-Select via ``ClusterSpec(placement="flat"|"node")`` or pass a backend
-to the runtime directly.
+Select via ``ClusterSpec(placement="flat"|"node")``; clusters with more
+than one :class:`~repro.core.job.DeviceClass` always get a ClassPool.
 """
 from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple
 
+from .job import DEFAULT_CLASS
 from .schedule import Placement
 
 
@@ -35,18 +41,24 @@ class PlacementBackend:
     def free_gpus(self) -> int:
         raise NotImplementedError
 
-    def feasible(self, n_gpus: int) -> bool:
+    def feasible(self, n_gpus: int,
+                 device_class: Optional[str] = None) -> bool:
         """Could a request of this size EVER be placed (empty cluster)?"""
         raise NotImplementedError
 
     def allocate(self, n_gpus: int,
-                 preferred_nodes: Optional[Sequence[int]] = None
+                 preferred_nodes: Optional[Sequence[int]] = None,
+                 device_class: Optional[str] = None
                  ) -> Optional[Placement]:
         """Return a Placement or None if it does not fit right now."""
         raise NotImplementedError
 
     def release(self, placement: Placement) -> None:
         raise NotImplementedError
+
+    def class_of(self, device: int) -> str:
+        """Which device class a global device id belongs to."""
+        return DEFAULT_CLASS
 
 
 class FlatPool(PlacementBackend):
@@ -62,10 +74,10 @@ class FlatPool(PlacementBackend):
     def free_gpus(self) -> int:
         return len(self._free)
 
-    def feasible(self, n_gpus: int) -> bool:
+    def feasible(self, n_gpus, device_class=None):
         return 0 < n_gpus <= self.total_gpus
 
-    def allocate(self, n_gpus, preferred_nodes=None):
+    def allocate(self, n_gpus, preferred_nodes=None, device_class=None):
         if n_gpus > len(self._free):
             return None
         devs = tuple(self._free[:n_gpus])
@@ -94,7 +106,7 @@ class NodeAware(PlacementBackend):
     def free_gpus(self) -> int:
         return sum(len(f) for f in self._free)
 
-    def feasible(self, n_gpus: int) -> bool:
+    def feasible(self, n_gpus, device_class=None):
         if n_gpus <= 0 or n_gpus > self.total_gpus:
             return False
         return (n_gpus <= self.gpus_per_node
@@ -105,7 +117,7 @@ class NodeAware(PlacementBackend):
         del self._free[nu][:n]
         return devs
 
-    def allocate(self, n_gpus, preferred_nodes=None):
+    def allocate(self, n_gpus, preferred_nodes=None, device_class=None):
         if not self.feasible(n_gpus):
             return None
         pref = list(preferred_nodes or [])
@@ -145,9 +157,91 @@ class NodeAware(PlacementBackend):
             self._free[nu].sort()
 
 
+class ClassPool(PlacementBackend):
+    """Heterogeneous clusters: one flat free pool per device class.
+
+    Global device ids are contiguous per class in declaration order
+    (matching :meth:`ClusterSpec.device_ranges`), so every Gantt entry's
+    device set maps back to a concrete class-qualified device.
+    """
+
+    kind = "class"
+
+    def __init__(self, classes: Sequence):
+        # classes: Sequence[repro.core.job.DeviceClass]
+        classes = tuple(classes)
+        super().__init__(sum(dc.total_gpus for dc in classes))
+        if not classes:
+            raise ValueError("ClassPool needs at least one device class")
+        self.classes = classes
+        self._range = {}
+        self._free = {}
+        off = 0
+        for dc in classes:
+            self._range[dc.name] = (off, off + dc.total_gpus)
+            self._free[dc.name] = list(range(off, off + dc.total_gpus))
+            off += dc.total_gpus
+
+    @property
+    def free_gpus(self) -> int:
+        return sum(len(f) for f in self._free.values())
+
+    def free_in(self, device_class: str) -> int:
+        return len(self._free[device_class])
+
+    def class_of(self, device: int) -> str:
+        for name, (lo, hi) in self._range.items():
+            if lo <= device < hi:
+                return name
+        raise KeyError(f"device {device} outside cluster")
+
+    def _capacity(self, device_class: str) -> int:
+        lo, hi = self._range[device_class]
+        return hi - lo
+
+    def feasible(self, n_gpus, device_class=None):
+        if n_gpus <= 0:
+            return False
+        if device_class is not None:
+            if device_class not in self._range:
+                raise PlacementError(
+                    f"unknown device class {device_class!r} "
+                    f"(have {list(self._range)})")
+            return n_gpus <= self._capacity(device_class)
+        return any(n_gpus <= self._capacity(n) for n in self._range)
+
+    def allocate(self, n_gpus, preferred_nodes=None, device_class=None):
+        if device_class is not None and device_class not in self._free:
+            raise PlacementError(
+                f"unknown device class {device_class!r} "
+                f"(have {list(self._free)})")
+        names = ([device_class] if device_class is not None
+                 else [dc.name for dc in self.classes])
+        for name in names:
+            free = self._free[name]
+            if n_gpus <= len(free):
+                devs = tuple(free[:n_gpus])
+                del free[:n_gpus]
+                return Placement(devs, device_class=name)
+        return None
+
+    def release(self, placement: Placement) -> None:
+        for d in placement.devices:
+            self._free[self.class_of(d)].append(d)
+        for free in self._free.values():
+            free.sort()
+
+
 def make_backend(cluster, kind: Optional[str] = None) -> PlacementBackend:
     """Build the backend a ClusterSpec asks for (default: its
-    ``placement`` field, falling back to flat)."""
+    ``placement`` field, falling back to flat).  Heterogeneous clusters
+    always allocate from per-class pools."""
+    if getattr(cluster, "hetero", False):
+        if (kind or getattr(cluster, "placement", "flat")) == "node":
+            raise ValueError("node-aware placement is not supported on "
+                             "heterogeneous clusters yet; use per-class "
+                             "pools (placement='flat')")
+        return ClassPool(cluster.device_classes)
     kind = kind or getattr(cluster, "placement", "flat")
     if kind == "flat":
         return FlatPool(cluster.total_gpus)

@@ -45,7 +45,7 @@ from ..models.params import abstract_params, param_count
 from ..models.transformer import model_spec
 from ..parallelism.base import Plan
 from ..parallelism.build import BuiltJob
-from .job import Job
+from .job import DEFAULT_CLASS, Job
 from .library import ParallelismLibrary
 
 
@@ -63,7 +63,19 @@ HARDWARE = {
     "v5e": HardwareSpec("v5e", 197e12, 819e9, 50e9, 16e9),
     # A100-40GB (the paper's p4d.24xlarge nodes)
     "a100": HardwareSpec("a100", 312e12, 1555e9, 600e9 / 8, 40e9),
+    # V100-16GB (p3.16xlarge) — the mixed-fleet second class
+    "v100": HardwareSpec("v100", 125e12, 900e9, 300e9 / 8, 16e9),
 }
+
+
+def hardware_for_class(base: HardwareSpec, device_class) -> HardwareSpec:
+    """Derive a per-class HardwareSpec from the cluster's reference
+    hardware and a :class:`~repro.core.job.DeviceClass`: rates scale by
+    ``speed_hint``; capacity comes from the class's HBM size."""
+    s = float(device_class.speed_hint)
+    return HardwareSpec(device_class.name, base.flops * s,
+                        base.hbm_bw * s, base.link_bw * s,
+                        device_class.hbm_per_gpu)
 
 _COLLECTIVE_RE = re.compile(
     r"=\s*([a-z0-9]+)\[([0-9,]*)\][^\n]*?\s"
@@ -102,12 +114,15 @@ class Profile:
     feasible: bool
     source: str
     terms: Dict[str, float] = dataclasses.field(default_factory=dict)
+    device_class: str = DEFAULT_CLASS
 
     def to_json(self):
         return dataclasses.asdict(self)
 
 
-CACHE_VERSION = 2          # bump when the Profile schema changes
+# v3: profiles carry a device_class — older caches are discarded on
+# load (not migrated: a class-blind trial cannot be attributed)
+CACHE_VERSION = 3
 PROFILE_MODES = ("analytic", "empirical", "napkin")
 
 
@@ -115,17 +130,41 @@ class TrialRunner:
     def __init__(self, library: ParallelismLibrary,
                  hardware: HardwareSpec = HARDWARE["a100"],
                  cache_path: Optional[str] = None,
-                 flush_every: int = 16):
+                 flush_every: int = 16,
+                 hardware_by_class: Optional[Dict[str, HardwareSpec]] = None):
         self.library = library
         self.hw = hardware
+        # per-device-class hardware: the reference spec under "default";
+        # register_class / hardware_by_class add mixed-fleet entries
+        self.hw_by_class: Dict[str, HardwareSpec] = {DEFAULT_CLASS: hardware}
+        self.hw_by_class.update(hardware_by_class or {})
         self.cache_path = cache_path
         self.flush_every = max(1, flush_every)
         self.trials = 0            # real trials computed by THIS runner
         self._dirty = 0            # new profiles since the last flush
         self._lock = threading.Lock()
-        self._cache: Dict[Tuple[str, str, int, str], Profile] = {}
+        self._cache: Dict[Tuple[str, str, int, str, str], Profile] = {}
         if cache_path and os.path.exists(cache_path):
             self._load_cache(cache_path)
+
+    def register_class(self, device_class) -> HardwareSpec:
+        """Register a :class:`~repro.core.job.DeviceClass`, deriving its
+        HardwareSpec from the reference hardware (idempotent; an
+        explicit ``hardware_by_class`` entry wins)."""
+        hw = self.hw_by_class.get(device_class.name)
+        if hw is None:
+            hw = hardware_for_class(self.hw, device_class)
+            self.hw_by_class[device_class.name] = hw
+        return hw
+
+    def _class_hw(self, device_class: str) -> HardwareSpec:
+        try:
+            return self.hw_by_class[device_class]
+        except KeyError:
+            raise ValueError(
+                f"unknown device class {device_class!r}; register it "
+                f"(register_class / hardware_by_class); have "
+                f"{list(self.hw_by_class)}") from None
 
     def _load_cache(self, path: str) -> None:
         """Versioned load: stale schemas (the legacy bare list, an older
@@ -143,30 +182,37 @@ class TrialRunner:
                 p = Profile(**rec)
             except TypeError:
                 continue
-            self._cache[(p.job, p.technique, p.n_devices, p.source)] = p
+            self._cache[(p.job, p.technique, p.n_devices, p.source,
+                         p.device_class)] = p
 
     # ------------------------------------------------------------- public
     def profile(self, job: Job, technique: str, n_devices: int,
-                mode: str = "analytic") -> Profile:
+                mode: str = "analytic",
+                device_class: str = DEFAULT_CLASS) -> Profile:
         if mode not in PROFILE_MODES:
             raise ValueError(f"unknown profiling mode {mode!r}; "
                              f"expected one of {PROFILE_MODES}")
-        key = (job.name, technique, n_devices, mode)
+        hw = self._class_hw(device_class)
+        key = (job.name, technique, n_devices, mode, device_class)
         with self._lock:
             if key in self._cache:
                 return self._cache[key]
         tech = self.library.get(technique)
         if not tech.search_space(job.cfg, n_devices):
             prof = Profile(job.name, technique, n_devices, float("inf"),
-                           float("inf"), False, mode)
+                           float("inf"), False, mode,
+                           device_class=device_class)
             ran_trial = False
         else:
             if mode == "empirical":
-                prof = self._profile_empirical(job, technique, n_devices)
+                prof = self._profile_empirical(job, technique, n_devices,
+                                               hw, device_class)
             elif mode == "napkin":
-                prof = self._profile_napkin(job, technique, n_devices)
+                prof = self._profile_napkin(job, technique, n_devices,
+                                            hw, device_class)
             else:
-                prof = self._profile_analytic(job, technique, n_devices)
+                prof = self._profile_analytic(job, technique, n_devices,
+                                              hw, device_class)
             ran_trial = True
         with self._lock:
             self._cache[key] = prof
@@ -180,51 +226,82 @@ class TrialRunner:
     def profile_all(self, jobs, gpu_counts, mode="analytic", *,
                     strategy: str = "exhaustive",
                     workers: Optional[int] = None,
-                    anchor_ratio: float = 2.0):
+                    anchor_ratio: float = 2.0,
+                    classes=None):
         """Profile a workload over ``gpu_counts``.
 
         ``strategy="exhaustive"`` runs a real trial at every valid
         (technique, count) and returns the legacy profile dict.
 
         ``strategy="interpolate"`` runs trials only at the geometric
-        anchor subset per ⟨job, technique⟩ (plus feasibility boundary
-        counts) and returns a :class:`~repro.core.perfmodel.PerfModel`
-        whose curves evaluate every other count.
+        anchor subset per ⟨job, technique, device class⟩ (plus
+        feasibility boundary counts) and returns a
+        :class:`~repro.core.perfmodel.PerfModel` whose curves evaluate
+        every other count.
+
+        ``classes`` (a sequence of :class:`~repro.core.job.DeviceClass`)
+        switches on heterogeneous profiling: every class gets its OWN
+        anchor trials against its own hardware constants, counts are
+        truncated to each class's capacity, and results are keyed
+        ``(job, tech, device_class, g)`` (dict) / carry class-qualified
+        curves (PerfModel).  Without it, the legacy single-class shapes
+        are preserved exactly.
         """
         from .perfmodel import (PerfModel, ThroughputCurve,
                                 select_anchor_counts)
         counts = sorted(set(int(g) for g in gpu_counts))
+        hetero = classes is not None
+        if hetero:
+            class_counts = {dc.name: [g for g in counts
+                                      if g <= dc.total_gpus]
+                            for dc in classes}
+            for dc in classes:
+                self.register_class(dc)
+        else:
+            class_counts = {DEFAULT_CLASS: counts}
         if strategy == "exhaustive":
-            tasks = [(job, tech, g) for job in jobs
-                     for tech, g in self.library.candidates(job.cfg, counts)]
+            tasks = [(job, tech, g, dc)
+                     for job in jobs for dc, cts in class_counts.items()
+                     for tech, g in self.library.candidates(job.cfg, cts)]
             self._run_trials(tasks, mode, workers)
             self.flush()
-            return {(job.name, tech, g): self._cache[(job.name, tech, g,
-                                                      mode)]
-                    for job, tech, g in tasks}
+            if hetero:
+                return {(job.name, tech, dc, g):
+                        self._cache[(job.name, tech, g, mode, dc)]
+                        for job, tech, g, dc in tasks}
+            return {(job.name, tech, g):
+                    self._cache[(job.name, tech, g, mode, DEFAULT_CLASS)]
+                    for job, tech, g, _ in tasks}
         if strategy != "interpolate":
             raise ValueError(f"unknown profiling strategy {strategy!r}; "
                              f"expected 'exhaustive' or 'interpolate'")
-        plan: Dict[Tuple[str, str], Tuple[Job, list, list]] = {}
+        plan: Dict[Tuple[str, str, str], Tuple[Job, list, list]] = {}
         tasks = []
         for job in jobs:
-            for tech_name, tech in self.library.items():
-                valid = [g for g in counts if tech.search_space(job.cfg, g)]
-                if not valid:
-                    continue
-                anchors = select_anchor_counts(valid, anchor_ratio)
-                plan[(job.name, tech_name)] = (job, valid, anchors)
-                tasks.extend((job, tech_name, g) for g in anchors)
+            for dc, cts in class_counts.items():
+                for tech_name, tech in self.library.items():
+                    valid = [g for g in cts
+                             if tech.search_space(job.cfg, g)]
+                    if not valid:
+                        continue
+                    anchors = select_anchor_counts(valid, anchor_ratio)
+                    plan[(job.name, tech_name, dc)] = (job, valid, anchors)
+                    tasks.extend((job, tech_name, g, dc) for g in anchors)
         self._run_trials(tasks, mode, workers)
         self.flush()
         curves = {}
-        for (jname, tech_name), (job, valid, anchors) in plan.items():
-            profs = {g: self._cache[(jname, tech_name, g, mode)]
+        for (jname, tech_name, dc), (job, valid, anchors) in plan.items():
+            profs = {g: self._cache[(jname, tech_name, g, mode, dc)]
                      for g in anchors}
-            curves[(jname, tech_name)] = ThroughputCurve(
-                jname, tech_name, self.hw.hbm_capacity, profs,
-                valid=valid, domain=counts)
-        return PerfModel(curves, counts)
+            curve = ThroughputCurve(
+                jname, tech_name, self._class_hw(dc).hbm_capacity, profs,
+                valid=valid, domain=class_counts[dc], device_class=dc)
+            if hetero:
+                curves[(jname, tech_name, dc)] = curve
+            else:
+                curves[(jname, tech_name)] = curve
+        return PerfModel(curves, counts,
+                         counts_by_class=class_counts if hetero else None)
 
     def _run_trials(self, tasks, mode: str, workers: Optional[int]) -> None:
         """Run the outstanding real trials, in parallel where safe.
@@ -235,28 +312,29 @@ class TrialRunner:
         """
         seen = set()
         todo = []
-        for job, tech, g in tasks:
-            key = (job.name, tech, g)
+        for job, tech, g, dc in tasks:
+            key = (job.name, tech, g, dc)
             if key in seen:
                 continue
             seen.add(key)
-            todo.append((job, tech, g))
+            todo.append((job, tech, g, dc))
         if workers is None:
             workers = 1 if mode == "empirical" else \
                 min(8, os.cpu_count() or 1)
         if workers <= 1 or len(todo) <= 1 or mode == "empirical":
-            for job, tech, g in todo:
-                self.profile(job, tech, g, mode)
+            for job, tech, g, dc in todo:
+                self.profile(job, tech, g, mode, device_class=dc)
             return
         with ThreadPoolExecutor(max_workers=workers) as pool:
-            futs = [pool.submit(self.profile, job, tech, g, mode)
-                    for job, tech, g in todo]
+            futs = [pool.submit(self.profile, job, tech, g, mode,
+                                device_class=dc)
+                    for job, tech, g, dc in todo]
             for f in futs:
                 f.result()
 
     # --------------------------------------------------------- empirical
-    def _profile_empirical(self, job: Job, technique: str,
-                           n_devices: int) -> Profile:
+    def _profile_empirical(self, job: Job, technique: str, n_devices: int,
+                           hw: HardwareSpec, device_class: str) -> Profile:
         from ..configs import concrete_batch
         if n_devices > len(jax.devices()):
             raise RuntimeError(
@@ -278,27 +356,31 @@ class TrialRunner:
         dt = (time.perf_counter() - t0) / 2
         mem = self._mem_estimate(job, plan)
         return Profile(job.name, technique, n_devices, dt, mem,
-                       mem <= self.hw.hbm_capacity, "empirical")
+                       mem <= hw.hbm_capacity, "empirical",
+                       device_class=device_class)
 
     # ---------------------------------------------------------- analytic
-    def _profile_analytic(self, job: Job, technique: str,
-                          n_devices: int) -> Profile:
+    def _profile_analytic(self, job: Job, technique: str, n_devices: int,
+                          hw: HardwareSpec, device_class: str) -> Profile:
         tech = self.library.get(technique)
         plan = tech.plan(job.cfg, n_devices)
         return self._finish(job, technique, n_devices,
-                            self._roofline_terms(job, plan), "analytic")
+                            self._roofline_terms(job, plan, hw),
+                            "analytic", hw, device_class)
 
-    def _profile_napkin(self, job: Job, technique: str,
-                        n_devices: int) -> Profile:
+    def _profile_napkin(self, job: Job, technique: str, n_devices: int,
+                        hw: HardwareSpec, device_class: str) -> Profile:
         """Closed-form roofline only — no lowering/compilation.  The
         cheap deterministic backend for benchmark sweeps."""
         tech = self.library.get(technique)
         plan = tech.plan(job.cfg, n_devices)
         return self._finish(job, technique, n_devices,
-                            self._roofline_napkin(job, plan), "napkin")
+                            self._roofline_napkin(job, plan, hw),
+                            "napkin", hw, device_class)
 
     def _finish(self, job: Job, technique: str, n_devices: int,
-                terms: Dict[str, float], source: str) -> Profile:
+                terms: Dict[str, float], source: str,
+                hw: HardwareSpec, device_class: str) -> Profile:
         tech = self.library.get(technique)
         mem = terms.pop("mem_per_device")
         # roofline: compute and memory overlap with collectives imperfectly;
@@ -307,7 +389,8 @@ class TrialRunner:
         t *= tech.step_overhead()
         terms["modeled_step_s"] = t
         return Profile(job.name, technique, n_devices, t, mem,
-                       mem <= self.hw.hbm_capacity, source, terms)
+                       mem <= hw.hbm_capacity, source, terms,
+                       device_class=device_class)
 
     def _mem_estimate(self, job: Job, plan: Plan) -> float:
         """Params + AdamW state + activation estimate, per device."""
@@ -329,16 +412,18 @@ class TrialRunner:
             return 2.0 * b * s * cfg.d_model * layers  # one residual/layer
         return per_layer * layers
 
-    def _roofline_terms(self, job: Job, plan: Plan) -> Dict[str, float]:
+    def _roofline_terms(self, job: Job, plan: Plan,
+                        hw: HardwareSpec) -> Dict[str, float]:
         """Lower + compile the real step on a placeholder mesh and read
         cost_analysis / HLO collectives.  Falls back to a napkin model if
         the local device pool can't host the mesh."""
         try:
-            return self._roofline_from_compile(job, plan)
+            return self._roofline_from_compile(job, plan, hw)
         except Exception:
-            return self._roofline_napkin(job, plan)
+            return self._roofline_napkin(job, plan, hw)
 
-    def _roofline_from_compile(self, job: Job, plan: Plan):
+    def _roofline_from_compile(self, job: Job, plan: Plan,
+                               hw: HardwareSpec):
         from ..configs import concrete_batch
         n = plan.n_devices
         if n > len(jax.devices()):
@@ -362,9 +447,9 @@ class TrialRunner:
         coll_bytes = coll["total"] / n
         mem = self._compiled_mem(compiled) or self._mem_estimate(job, plan)
         return {
-            "compute_s": flops / self.hw.flops,
-            "memory_s": bytes_acc / self.hw.hbm_bw,
-            "collective_s": coll_bytes / self.hw.link_bw,
+            "compute_s": flops / hw.flops,
+            "memory_s": bytes_acc / hw.hbm_bw,
+            "collective_s": coll_bytes / hw.link_bw,
             "hlo_flops": flops * n,
             "collective_bytes": coll["total"],
             "mem_per_device": mem,
@@ -380,7 +465,8 @@ class TrialRunner:
         except Exception:
             return None
 
-    def _roofline_napkin(self, job: Job, plan: Plan) -> Dict[str, float]:
+    def _roofline_napkin(self, job: Job, plan: Plan,
+                         hw: HardwareSpec) -> Dict[str, float]:
         """6·N·D flops model when compile-based profiling is unavailable.
 
         Includes the two effects that make right-sizing matter (and that
@@ -406,7 +492,7 @@ class TrialRunner:
         util = (d_eff / (d_eff + 1024.0)) * (tok_dev / (tok_dev + knee))
         util = max(util, 0.02)
         flops = 6.0 * n_active * tokens / g
-        compute_s = flops / (self.hw.flops * util)
+        compute_s = flops / (hw.flops * util)
         # fixed per-step overhead: launch + per-layer collective latency
         fixed_s = 2e-3 + 1e-4 * g + cfg.num_layers * 5e-5 * np.log2(max(g, 2))
         # bytes: params read 3x (fwd, bwd, opt) + activations
@@ -416,8 +502,8 @@ class TrialRunner:
         coll = 4.0 * n_params / max(g, 1) if g > 1 else 0.0  # grad reduce
         return {
             "compute_s": compute_s + fixed_s,
-            "memory_s": bytes_acc / self.hw.hbm_bw,
-            "collective_s": coll / self.hw.link_bw,
+            "memory_s": bytes_acc / hw.hbm_bw,
+            "collective_s": coll / hw.link_bw,
             "hlo_flops": flops * g,
             "collective_bytes": coll * g,
             "mem_per_device": self._mem_estimate(job, plan),

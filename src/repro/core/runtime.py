@@ -10,10 +10,17 @@ discrete-event simulation over :mod:`.events`:
   :class:`RestartDone` event fires at ``t + restart_cost_s`` (the legacy
   loop re-admitted them immediately while also recording a restart
   Gantt entry — double-booking the GPUs);
-- placement is pluggable (:mod:`.placement`): flat pool or node-aware,
-  so the executor can honor what ``solve_joint_nodes`` plans;
-- every Gantt entry records the concrete device set it occupied, making
-  GPU-second conservation checkable per device.
+- placement is pluggable (:mod:`.placement`): flat pool, node-aware, or
+  per-device-class pools on heterogeneous clusters, so the executor can
+  honor what ``solve_joint_nodes`` / ``solve_joint_classes`` plan;
+- every Gantt entry records the concrete device set (and device class)
+  it occupied, and the engine asserts GPU-second conservation PER
+  DEVICE CLASS before returning — not just globally — so a migration
+  bug that double-books one class while under-booking another cannot
+  cancel out;
+- an introspection replan may migrate a job across device classes: the
+  assignment diff includes the class, so the job pays exactly one
+  restart penalty and relaunches from the new class's pool.
 
 The simulator separates *estimated* step times (what policies see, from
 the Trial Runner — either an exhaustive profile dict or a curve-backed
@@ -26,15 +33,17 @@ re-solving on observed remaining work recovers the gap.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from .events import (EventQueue, IntrospectionTick, JobArrival,
                      JobCompletion, RestartDone)
-from .job import ClusterSpec, Job
-from .perfmodel import step_time_of
-from .placement import PlacementBackend, PlacementError, make_backend
+from .job import DEFAULT_CLASS, ClusterSpec, Job
+from .perfmodel import profile_key, step_time_of
+from .placement import (ClassPool, PlacementBackend, PlacementError,
+                        make_backend)
 from .profiler import Profile
 from .schedule import Placement, Policy, Schedule
 
@@ -48,6 +57,7 @@ class GanttEntry:
     end_s: float
     kind: str = "run"          # run | restart
     devices: Tuple[int, ...] = ()
+    device_class: str = DEFAULT_CLASS
 
 
 @dataclasses.dataclass
@@ -86,10 +96,15 @@ class _Running:
     steps_at_start: int
     token: int
 
+    @property
+    def device_class(self) -> str:
+        return getattr(self.placement, "device_class", DEFAULT_CLASS)
+
 
 class ClusterState:
     """Mutable simulation state: job phases, remaining work, placements,
-    and the Gantt log under construction."""
+    the Gantt log under construction, and per-device-class GPU-second
+    accounting (the runtime's conservation invariant)."""
 
     def __init__(self, jobs: List[Job], backend: PlacementBackend):
         self.by_name: Dict[str, Job] = {j.name: j for j in jobs}
@@ -100,7 +115,9 @@ class ClusterState:
         self.running: Dict[str, _Running] = {}
         self.backend = backend
         self.gantt: List[GanttEntry] = []
-        self.current_assign: Dict[str, Tuple[str, int]] = {}
+        self.current_assign: Dict[str, Tuple] = {}
+        self.busy_gpu_s: Dict[str, float] = {}   # device class -> GPU-seconds
+        self._alloc_open: Dict[int, Tuple[float, int, str]] = {}
         self.t = 0.0
 
     def settle(self, upto_t: float) -> None:
@@ -108,6 +125,27 @@ class ClusterState:
         for name, r in self.running.items():
             done = int((upto_t - r.start_s) / r.true_step_s)
             self.remaining[name] = max(0, r.steps_at_start - done)
+
+    def note_alloc(self, token: int, t: float, n_gpus: int,
+                   device_class: str) -> None:
+        """Record an allocation at LAUNCH time.  This bookkeeping is
+        written on the launch path (start_fitting), independently of the
+        Gantt entries written on the release paths, so the conservation
+        check reconciles two genuinely distinct records."""
+        self._alloc_open[token] = (t, n_gpus, device_class)
+
+    def close_alloc(self, token: int, end_s: float) -> None:
+        """Close an allocation at release time and charge its class."""
+        t0, n, dc = self._alloc_open.pop(token)
+        self.busy_gpu_s[dc] = self.busy_gpu_s.get(dc, 0.0) \
+            + (end_s - t0) * n
+
+    def log_run(self, name: str, r: _Running, end_s: float) -> None:
+        """Close a run segment: Gantt entry + launch-side accounting."""
+        self.close_alloc(r.token, end_s)
+        self.gantt.append(GanttEntry(
+            name, r.technique, r.n_gpus, r.start_s, end_s,
+            devices=r.placement.devices, device_class=r.device_class))
 
     def live_jobs(self) -> List[Job]:
         """Arrived, unfinished jobs (running, waiting, or restarting) —
@@ -117,6 +155,58 @@ class ClusterState:
 
     def all_done(self) -> bool:
         return all(v == 0 for v in self.remaining.values())
+
+
+def verify_conservation(state: ClusterState) -> None:
+    """GPU-second conservation, per device class.
+
+    Reconciles the launch-side allocation bookkeeping (token -> launch
+    time / size / class, written in ``start_fitting`` from the actual
+    Placement) against the release-side Gantt segments (written from the
+    ``_Running`` record), and both against the concrete device ids those
+    segments claim.  A device double-booked within its class, a segment
+    whose devices belong to a different class than recorded, a launch
+    whose placement was never released, or busy-seconds leaking from one
+    class to another all fail here — even when the GLOBAL totals happen
+    to balance out.
+    """
+    if state._alloc_open:
+        raise RuntimeError(
+            f"conservation: {len(state._alloc_open)} allocation(s) never "
+            f"released: {sorted(state._alloc_open)}")
+    runs = [g for g in state.gantt if g.kind == "run"]
+    per_class: Dict[str, float] = {}
+    by_dev: Dict[int, List[Tuple[float, float, str, str]]] = {}
+    for g in runs:
+        if len(set(g.devices)) != g.n_gpus:
+            raise RuntimeError(
+                f"conservation: {g.job} records {g.n_gpus} GPUs but "
+                f"{len(set(g.devices))} distinct devices")
+        per_class[g.device_class] = per_class.get(g.device_class, 0.0) \
+            + (g.end_s - g.start_s) * g.n_gpus
+        for d in g.devices:
+            dc = state.backend.class_of(d)
+            if dc != g.device_class:
+                raise RuntimeError(
+                    f"conservation: {g.job} recorded class "
+                    f"{g.device_class!r} but device {d} belongs to {dc!r}")
+            by_dev.setdefault(d, []).append(
+                (g.start_s, g.end_s, g.job, g.device_class))
+    classes = set(per_class) | set(state.busy_gpu_s)
+    for dc in classes:
+        a = per_class.get(dc, 0.0)
+        b = state.busy_gpu_s.get(dc, 0.0)
+        if abs(a - b) > 1e-6 * max(1.0, a, b):
+            raise RuntimeError(
+                f"conservation: class {dc!r} gantt={a:.6f} GPU-s vs "
+                f"accounted={b:.6f} GPU-s")
+    for d, ivs in by_dev.items():
+        ivs.sort()
+        for (s1, e1, j1, _), (s2, e2, j2, _) in zip(ivs, ivs[1:]):
+            if e1 > s2 + 1e-9:
+                raise RuntimeError(
+                    f"conservation: device {d} double-booked: "
+                    f"{j1}[{s1},{e1}] overlaps {j2}[{s2},{e2}]")
 
 
 def simulate_runtime(jobs: List[Job], policy: Policy,
@@ -142,13 +232,38 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
     launch_tokens = {}            # job -> token of its current launch
     next_token = [0]
 
-    def est_step(jname, tech, g):
+    def est_step(jname, tech, g, dclass=None):
         # curve-backed performance models answer at ANY count, so
         # introspection replans may pick counts nobody profiled
-        return step_time_of(profiles, jname, tech, g)
+        return step_time_of(profiles, jname, tech, g, device_class=dclass)
 
-    def true_step(jname, tech, g):
-        return est_step(jname, tech, g) * noise.get((jname, tech, g), 1.0)
+    def true_step(jname, tech, g, dclass=None):
+        key = profile_key(profiles, jname, tech, g, dclass)
+        return est_step(jname, tech, g, dclass) * noise.get(key, 1.0)
+
+    def allocate_for(entry):
+        """Place one entry: class-pinned entries draw from their class's
+        pool; class-blind entries on a heterogeneous cluster take the
+        first class with room where the config is actually runnable
+        (finite estimated step time)."""
+        if entry.device_class is None and isinstance(backend, ClassPool) \
+                and len(backend.classes) > 1:
+            for dc in backend.classes:
+                try:
+                    st = est_step(entry.job, entry.technique,
+                                  entry.n_gpus, dc.name)
+                except KeyError:
+                    continue  # unprofiled on this class (e.g. count
+                    #           exceeds the class's capacity grid)
+                if not math.isfinite(st):
+                    continue
+                pl = backend.allocate(entry.n_gpus, device_class=dc.name)
+                if pl is not None:
+                    return pl
+            return None
+        return backend.allocate(entry.n_gpus,
+                                preferred_nodes=entry.nodes,
+                                device_class=entry.device_class)
 
     def start_fitting():
         """List scheduling: repeatedly start the first schedule entry
@@ -160,24 +275,25 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
                 name = entry.job
                 if name not in state.waiting:
                     continue
-                if not backend.feasible(entry.n_gpus):
+                if not backend.feasible(entry.n_gpus,
+                                        device_class=entry.device_class):
                     raise PlacementError(
-                        f"{name}: {entry.n_gpus} GPUs can never be placed "
-                        f"on backend {backend.kind!r} "
-                        f"({getattr(backend, 'nodes', '?')} nodes x "
-                        f"{getattr(backend, 'gpus_per_node', '?')} GPUs)")
-                pl = backend.allocate(entry.n_gpus,
-                                      preferred_nodes=entry.nodes)
+                        f"{name}: {entry.n_gpus} GPUs "
+                        f"(class {entry.device_class!r}) can never be "
+                        f"placed on backend {backend.kind!r}")
+                pl = allocate_for(entry)
                 if pl is None:
                     continue
-                st = true_step(name, entry.technique, entry.n_gpus)
+                dclass = getattr(pl, "device_class", DEFAULT_CLASS)
+                st = true_step(name, entry.technique, entry.n_gpus, dclass)
                 next_token[0] += 1
                 tok = next_token[0]
+                state.note_alloc(tok, state.t, pl.n_gpus, dclass)
                 state.running[name] = _Running(
                     state.by_name[name], entry.technique, entry.n_gpus,
                     pl, state.t, st, state.remaining[name], tok)
                 launch_tokens[name] = tok
-                state.current_assign[name] = (entry.technique, entry.n_gpus)
+                state.current_assign[name] = entry.assignment
                 state.waiting.remove(name)
                 q.push(JobCompletion(
                     state.t + state.remaining[name] * st, name, tok))
@@ -200,23 +316,35 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
                         new_assign[name] != state.current_assign.get(name):
                     r = state.running.pop(name)
                     backend.release(r.placement)
-                    state.gantt.append(GanttEntry(
-                        name, r.technique, r.n_gpus, r.start_s, state.t,
-                        devices=r.placement.devices))
+                    state.log_run(name, r, state.t)
                     # checkpoint + relaunch penalty: the job is only
                     # admissible again when RestartDone fires
                     state.gantt.append(GanttEntry(
                         name, "restart", 0, state.t,
-                        state.t + cluster.restart_cost_s, kind="restart"))
+                        state.t + cluster.restart_cost_s, kind="restart",
+                        device_class=r.device_class))
                     state.remaining[name] = max(1, state.remaining[name])
                     state.restarting.add(name)
                     q.push(RestartDone(
                         state.t + cluster.restart_cost_s, name))
                     restarts += 1
 
+    def finalize_if_done(t: float) -> bool:
+        """When every job's remaining work hits zero, jobs still marked
+        running finished at exactly this instant (their own completion
+        events are queued at the same time): close their segments and
+        release their devices instead of dropping them on the floor."""
+        if not state.all_done():
+            return False
+        for name in list(state.running):
+            r = state.running.pop(name)
+            backend.release(r.placement)
+            state.log_run(name, r, t)
+        return True
+
     events = 0
     while q:
-        if state.all_done():
+        if finalize_if_done(state.t):
             break
         ev = q.pop()
         events += 1
@@ -247,10 +375,8 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
             r = state.running.pop(ev.job)
             state.remaining[ev.job] = 0
             backend.release(r.placement)
-            state.gantt.append(GanttEntry(
-                ev.job, r.technique, r.n_gpus, r.start_s, ev.t,
-                devices=r.placement.devices))
-            if state.all_done():
+            state.log_run(ev.job, r, ev.t)
+            if finalize_if_done(ev.t):
                 break
             if policy.dynamic and policy.replan_on_completion and \
                     state.waiting:
@@ -290,4 +416,5 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
         unfinished = [n for n, v in state.remaining.items() if v > 0]
         raise RuntimeError(f"runtime drained with unfinished jobs: "
                            f"{unfinished}")
+    verify_conservation(state)
     return SimResult(policy.name, state.t, state.gantt, replans, restarts)

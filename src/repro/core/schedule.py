@@ -19,8 +19,14 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 @dataclasses.dataclass(frozen=True)
 class Placement:
-    """A concrete device-set assignment (global GPU indices)."""
+    """A concrete device-set assignment (global GPU indices).
+
+    ``device_class`` records which class pool the devices came from
+    (class-aware backends set it; single-class backends leave the
+    "default" tag).
+    """
     devices: Tuple[int, ...]
+    device_class: str = "default"
 
     @property
     def n_gpus(self) -> int:
@@ -41,6 +47,17 @@ class ScheduleEntry:
     start_s: Optional[float] = None     # planner-estimated start
     runtime_s: Optional[float] = None   # planner-estimated total runtime
     nodes: Optional[Tuple[int, ...]] = None  # node hint (node-aware MILP)
+    device_class: Optional[str] = None  # class pin (class-aware planners);
+    #                                     None = any class (class-blind)
+
+    @property
+    def assignment(self) -> Tuple:
+        """The identity the runtime diffs on replans: preempting when it
+        changes.  Class-aware entries include the device class, so a
+        replan that migrates a job across classes pays a real restart."""
+        if self.device_class is None:
+            return (self.technique, self.n_gpus)
+        return (self.technique, self.n_gpus, self.device_class)
 
     @property
     def end_s(self) -> Optional[float]:
@@ -70,9 +87,10 @@ class Schedule:
     def jobs(self) -> List[str]:
         return [e.job for e in self.entries]
 
-    def assignment_map(self) -> Dict[str, Tuple[str, int]]:
-        """job -> (technique, n_gpus); used for preemption diffs."""
-        return {e.job: (e.technique, e.n_gpus) for e in self.entries}
+    def assignment_map(self) -> Dict[str, Tuple]:
+        """job -> (technique, n_gpus[, device_class]); used for
+        preemption diffs."""
+        return {e.job: e.assignment for e in self.entries}
 
     def entry_for(self, job: str) -> Optional[ScheduleEntry]:
         for e in self.entries:

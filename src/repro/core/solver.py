@@ -59,6 +59,7 @@ class Choice:
     technique: str
     n_gpus: int
     runtime_s: float          # total remaining runtime under this config
+    device_class: Optional[str] = None   # class-qualified (hetero) choices
 
 
 @dataclasses.dataclass
@@ -69,6 +70,7 @@ class Assignment:
     start_s: float
     runtime_s: float
     nodes: Optional[Tuple[int, ...]] = None   # node-aware MILP only
+    device_class: Optional[str] = None        # class-aware MILP only
 
     @property
     def end_s(self) -> float:
@@ -79,7 +81,7 @@ class Assignment:
 class Solution:
     assignments: List[Assignment]
     makespan_s: float
-    solver: str               # "milp" | "milp-nodes" | "greedy"
+    solver: str               # "milp" | "milp-nodes" | "milp-classes" | "greedy"
     milp_status: Optional[str] = None
 
     def order(self) -> List[Assignment]:
@@ -89,7 +91,7 @@ class Solution:
         """Emit Schedule IR: the typed contract the runtime executes."""
         entries = [ScheduleEntry(a.job, a.technique, a.n_gpus,
                                  start_s=a.start_s, runtime_s=a.runtime_s,
-                                 nodes=a.nodes)
+                                 nodes=a.nodes, device_class=a.device_class)
                    for a in self.order()]
         return Schedule(entries, solver=self.solver,
                         makespan_s=self.makespan_s)
@@ -157,8 +159,9 @@ class _MilpBuilder:
         return res
 
 
-def choices_from_profiles(job: Job, profiles,
-                          *, prune: bool = True) -> List[Choice]:
+def choices_from_profiles(job: Job, profiles, *, prune: bool = True,
+                          device_class: Optional[str] = None
+                          ) -> List[Choice]:
     """Feasible (technique, g) choices with total runtimes for one job.
 
     ``profiles`` is either the legacy exhaustive dict or a
@@ -174,8 +177,10 @@ def choices_from_profiles(job: Job, profiles,
     does not change the optimum.
     """
     from .perfmodel import iter_job_profiles
-    out = [Choice(tech, g, p.step_time_s * job.total_steps)
-           for tech, g, p in iter_job_profiles(profiles, job.name)
+    out = [Choice(tech, g, p.step_time_s * job.total_steps,
+                  device_class=device_class)
+           for tech, g, p in iter_job_profiles(profiles, job.name,
+                                               device_class=device_class)
            if p.feasible]
     if prune and out:
         out.sort(key=lambda c: (c.n_gpus, c.runtime_s))
@@ -190,14 +195,26 @@ def choices_from_profiles(job: Job, profiles,
 
 
 def greedy_schedule(jobs: List[Job], choices: Dict[str, List[Choice]],
-                    total_gpus: int) -> Solution:
+                    total_gpus) -> Solution:
     """List scheduling: longest-remaining-work first, each job on its
-    best-throughput feasible choice that fits when it starts."""
+    best-throughput feasible choice that fits when it starts.
+
+    ``total_gpus`` is either a single pooled budget (int — the legacy
+    flat cluster) or per-device-class budgets (``{class_name: gpus}``);
+    with budgets, each Choice draws from its own class's pool.
+    """
+    if isinstance(total_gpus, dict):
+        free = dict(total_gpus)
+    else:
+        free = {None: int(total_gpus)}
+
+    def pool(c: Choice):
+        return c.device_class if c.device_class in free else None
+
     # rank jobs by their best-possible runtime, longest first
     ranked = sorted(
         jobs, key=lambda j: -min((c.runtime_s for c in choices[j.name]),
                                  default=0.0))
-    free = total_gpus
     t = 0.0
     running: List[Tuple[float, Assignment]] = []
     out: List[Assignment] = []
@@ -207,14 +224,15 @@ def greedy_schedule(jobs: List[Job], choices: Dict[str, List[Choice]],
         while progressed and queue:
             progressed = False
             for job in list(queue):
-                fits = [c for c in choices[job.name] if c.n_gpus <= free]
+                fits = [c for c in choices[job.name]
+                        if c.n_gpus <= free[pool(c)]]
                 if fits:
                     c = min(fits, key=lambda c: c.runtime_s)
                     a = Assignment(job.name, c.technique, c.n_gpus, t,
-                                   c.runtime_s)
+                                   c.runtime_s, device_class=c.device_class)
                     out.append(a)
                     running.append((a.end_s, a))
-                    free -= c.n_gpus
+                    free[pool(c)] -= c.n_gpus
                     queue.remove(job)
                     progressed = True
         if not running:
@@ -224,25 +242,29 @@ def greedy_schedule(jobs: List[Job], choices: Dict[str, List[Choice]],
         running.sort(key=lambda x: x[0])
         t_end, done = running.pop(0)
         t = t_end
-        free += done.n_gpus
+        key = done.device_class if done.device_class in free else None
+        free[key] += done.n_gpus
     makespan = max((a.end_s for a in out), default=0.0)
     return Solution(out, makespan, "greedy")
 
 
-def solve_joint(jobs: List[Job],
-                profiles: Dict[Tuple[str, str, int], Profile],
-                total_gpus: int, *,
-                n_slots: int = 24,
-                time_limit_s: float = 30.0,
-                mip_gap: float = 0.02) -> Solution:
-    """The joint MILP.  Falls back to greedy on infeasibility/timeout."""
-    choice_map = {j.name: choices_from_profiles(j, profiles) for j in jobs}
-    for j in jobs:
-        if not choice_map[j.name]:
-            raise ValueError(f"job {j.name}: no feasible (technique, g)")
-    ub = greedy_schedule(jobs, choice_map, total_gpus)
+def _solve_time_indexed(jobs: List[Job],
+                        choice_map: Dict[str, List[Choice]],
+                        budgets: Dict[Optional[str], int],
+                        ub: Solution, solver_name: str, *,
+                        n_slots: int, time_limit_s: float,
+                        mip_gap: float) -> Solution:
+    """The shared time-indexed MILP core behind ``solve_joint`` (one
+    pooled budget under the ``None`` key) and ``solve_joint_classes``
+    (one budget per device class): binary start variables x[j, c, t],
+    capacity rows per (budget pool, slot), a continuous makespan var,
+    and an eps tie-break toward earlier starts.  Falls back to the
+    greedy upper bound ``ub`` on infeasibility/timeout."""
     horizon = max(ub.makespan_s, 1e-6) * 1.05
     delta = horizon / n_slots
+
+    def pool(c: Choice) -> Optional[str]:
+        return c.device_class if c.device_class in budgets else None
 
     # variable layout: x[j, c, t] flattened, then M last
     index: List[Tuple[int, Choice, int]] = []   # (job_idx, choice, slot)
@@ -262,15 +284,21 @@ def solve_joint(jobs: List[Job],
     b = _MilpBuilder(nx)
     # (1) each job picks exactly one (choice, start)
     for ji in range(len(jobs)):
-        b.add([(vi, 1.0) for (ji2, ci, t), vi in var_of.items()
-               if ji2 == ji], 1.0, 1.0)
-    # (2) capacity per slot
-    for tau in range(n_slots):
-        terms = [(vi, float(choice_map[jobs[ji].name][ci].n_gpus))
-                 for (ji, ci, t), vi in var_of.items()
-                 if t <= tau < t + dur_of[vi]]
-        if terms:
-            b.add(terms, -np.inf, float(total_gpus))
+        terms = [(vi, 1.0) for (ji2, ci, t), vi in var_of.items()
+                 if ji2 == ji]
+        if not terms:
+            return ub          # some job's every choice outlasts horizon
+        b.add(terms, 1.0, 1.0)
+    # (2) capacity per (budget pool, slot)
+    for pkey, cap in budgets.items():
+        for tau in range(n_slots):
+            terms = []
+            for (ji, ci, t), vi in var_of.items():
+                c = choice_map[jobs[ji].name][ci]
+                if pool(c) == pkey and t <= tau < t + dur_of[vi]:
+                    terms.append((vi, float(c.n_gpus)))
+            if terms:
+                b.add(terms, -np.inf, float(cap))
     # (3) makespan: (t + dur)*delta * x - M <= 0
     for (ji, ci, t), vi in var_of.items():
         b.add_makespan(vi, (t + dur_of[vi]) * delta)
@@ -296,11 +324,66 @@ def solve_joint(jobs: List[Job],
         _, ci, t = key_of[best_vi]
         c = choice_map[j.name][ci]
         assignments.append(Assignment(j.name, c.technique, c.n_gpus,
-                                      t * delta, c.runtime_s))
+                                      t * delta, c.runtime_s,
+                                      device_class=c.device_class))
     makespan = max(a.end_s for a in assignments)
-    sol = Solution(assignments, makespan, "milp", milp_status=res.message)
+    sol = Solution(assignments, makespan, solver_name,
+                   milp_status=res.message)
     # keep whichever is better (slot rounding can make MILP worse)
     return sol if makespan <= ub.makespan_s + 1e-6 else ub
+
+
+def solve_joint(jobs: List[Job],
+                profiles: Dict[Tuple[str, str, int], Profile],
+                total_gpus: int, *,
+                n_slots: int = 24,
+                time_limit_s: float = 30.0,
+                mip_gap: float = 0.02) -> Solution:
+    """The joint MILP.  Falls back to greedy on infeasibility/timeout."""
+    choice_map = {j.name: choices_from_profiles(j, profiles) for j in jobs}
+    for j in jobs:
+        if not choice_map[j.name]:
+            raise ValueError(f"job {j.name}: no feasible (technique, g)")
+    ub = greedy_schedule(jobs, choice_map, total_gpus)
+    return _solve_time_indexed(jobs, choice_map, {None: int(total_gpus)},
+                               ub, "milp", n_slots=n_slots,
+                               time_limit_s=time_limit_s, mip_gap=mip_gap)
+
+
+def solve_joint_classes(jobs: List[Job], profiles, cluster, *,
+                        n_slots: int = 20,
+                        time_limit_s: float = 30.0,
+                        mip_gap: float = 0.05) -> Solution:
+    """Device-class-aware joint MILP for heterogeneous clusters.
+
+    A job's config space is the union over device classes of its
+    feasible (technique, g) choices ON that class — each evaluated
+    against the class's own throughput curve, so a V100 choice carries a
+    genuinely longer runtime than its A100 twin.  The flat capacity
+    constraint becomes one capacity row per (class, slot): apportionment
+    now picks *which* class as well as *how many* GPUs.  Assignments
+    carry the chosen class, which the runtime's ClassPool placement pins.
+
+    Falls back to a per-class-budget greedy on infeasibility/timeout.
+    """
+    classes = list(cluster.device_classes)
+    budgets: Dict[Optional[str], int] = {dc.name: dc.total_gpus
+                                         for dc in classes}
+    choice_map: Dict[str, List[Choice]] = {}
+    for j in jobs:
+        cs: List[Choice] = []
+        for dc in classes:
+            cs.extend(choices_from_profiles(j, profiles,
+                                            device_class=dc.name))
+        cs = [c for c in cs if c.n_gpus <= budgets[c.device_class]]
+        if not cs:
+            raise ValueError(
+                f"job {j.name}: no feasible (technique, g, class)")
+        choice_map[j.name] = cs
+    ub = greedy_schedule(jobs, choice_map, budgets)
+    return _solve_time_indexed(jobs, choice_map, budgets, ub,
+                               "milp-classes", n_slots=n_slots,
+                               time_limit_s=time_limit_s, mip_gap=mip_gap)
 
 
 def solve_joint_nodes(jobs: List[Job],

@@ -1,0 +1,397 @@
+"""Heterogeneous-cluster support: DeviceClass specs, class-keyed
+profiles/curves, the class-dimension MILP, per-class placement pools,
+cross-class migration restarts, and per-class GPU-second conservation."""
+import json
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.baselines import (CurrentPractice, Optimus, OptimusDynamic,
+                                  RandomPolicy, SaturnPolicy)
+from repro.core.executor import simulate
+from repro.core.job import DEFAULT_CLASS, ClusterSpec, DeviceClass, Job
+from repro.core.library import ParallelismLibrary
+from repro.core.perfmodel import (iter_job_class_profiles,
+                                  iter_job_profiles, step_time_of)
+from repro.core.placement import ClassPool, PlacementError, make_backend
+from repro.core.profiler import (CACHE_VERSION, HARDWARE, Profile,
+                                 TrialRunner, hardware_for_class)
+from repro.core.schedule import Policy, Schedule, ScheduleEntry
+from repro.core.solver import solve_joint_classes
+
+CFG = get_config("xlstm-125m").reduced()
+
+FAST = DeviceClass("fast", nodes=1, gpus_per_node=8,
+                   hbm_per_gpu=40e9, speed_hint=1.0)
+SLOW = DeviceClass("slow", nodes=1, gpus_per_node=8,
+                   hbm_per_gpu=16e9, speed_hint=0.4)
+HET = ClusterSpec(restart_cost_s=10.0, device_classes=(FAST, SLOW))
+
+
+def mk_hetero_profiles(jobs, counts=(1, 2, 4, 8), slow_factor=2.5,
+                       techs=(("ddp", 1.0), ("fsdp", 1.1))):
+    profiles = {}
+    for i, j in enumerate(jobs):
+        base = 1.0 + 0.5 * i
+        for dc, slow in (("fast", 1.0), ("slow", slow_factor)):
+            for g in counts:
+                for tech, mult in techs:
+                    profiles[(j.name, tech, dc, g)] = Profile(
+                        j.name, tech, g, base * mult * slow / g ** 0.8,
+                        1e9, True, "t", device_class=dc)
+    return profiles
+
+
+# ------------------------------------------------------------ ClusterSpec
+
+def test_legacy_cluster_shim():
+    c = ClusterSpec(nodes=2, gpus_per_node=8)
+    assert not c.hetero
+    assert c.total_gpus == 16
+    assert [dc.name for dc in c.device_classes] == [DEFAULT_CLASS]
+    assert c.device_classes[0].hbm_per_gpu == c.hbm_per_gpu
+
+
+def test_single_explicit_class_is_class_aware():
+    """A lone EXPLICIT DeviceClass must flow through the class-aware
+    machinery — its speed_hint / hbm_per_gpu are real hardware facts,
+    not the reference defaults.  Only the shim's synthesized "default"
+    class reduces to the legacy single-pool behavior."""
+    lone = ClusterSpec(device_classes=(
+        DeviceClass("v100-16g", 1, 8, hbm_per_gpu=16e9, speed_hint=0.4),))
+    assert lone.hetero
+    from repro.core.api import SaturnSession
+    sess = SaturnSession(lone)
+    sess.submit([Job("a", CFG, 8, 64, 50)])
+    pm = sess.profile(mode="napkin")
+    assert pm.hetero and pm.classes == ["v100-16g"]
+    # the class's own hardware, not the A100 reference, did the trials
+    hw = sess.runner.hw_by_class["v100-16g"]
+    assert hw.hbm_capacity == 16e9
+    assert hw.flops == pytest.approx(HARDWARE["a100"].flops * 0.4)
+    ref = TrialRunner(ParallelismLibrary(), HARDWARE["a100"]).profile(
+        Job("a", CFG, 8, 64, 50), "ddp", 2, mode="napkin")
+    assert pm.step_time("a", "ddp", 2, "v100-16g") > ref.step_time_s
+
+
+def test_hetero_cluster_spec():
+    assert HET.hetero
+    assert HET.total_gpus == 16
+    assert HET.device_ranges() == {"fast": (0, 8), "slow": (8, 16)}
+    assert HET.class_of_device(3) == "fast"
+    assert HET.class_of_device(11) == "slow"
+    assert HET.class_named("slow") is SLOW
+    with pytest.raises(KeyError):
+        HET.class_named("h100")
+    with pytest.raises(ValueError):
+        ClusterSpec(device_classes=(FAST, FAST))
+
+
+# --------------------------------------------------------------- ClassPool
+
+def test_class_pool_pinned_and_blind_allocation():
+    b = make_backend(HET)
+    assert isinstance(b, ClassPool)
+    pinned = b.allocate(5, device_class="slow")
+    assert pinned.device_class == "slow"
+    assert all(8 <= d < 16 for d in pinned.devices)
+    blind = b.allocate(6)                 # first class with room: fast
+    assert blind.device_class == "fast"
+    assert b.allocate(4, device_class="fast") is None   # only 2 left
+    spill = b.allocate(3)                 # blind spills to slow (3 free)
+    assert spill.device_class == "slow"
+    b.release(pinned)
+    assert b.free_in("slow") == 5
+    assert b.feasible(8, device_class="slow")
+    assert not b.feasible(9, device_class="slow")
+    assert b.feasible(8)                  # some class can host 8
+    with pytest.raises(PlacementError):
+        b.allocate(1, device_class="h100")
+
+
+def test_node_placement_rejected_on_hetero():
+    import dataclasses
+    with pytest.raises(ValueError):
+        make_backend(dataclasses.replace(HET, placement="node"))
+
+
+# ---------------------------------------------------- profiler + perfmodel
+
+def test_profiler_keys_and_per_class_speed():
+    jobs = [Job("a", CFG, 8, 64, 100)]
+    runner = TrialRunner(ParallelismLibrary(), HARDWARE["a100"])
+    d = runner.profile_all(jobs, [1, 2, 4, 8], mode="napkin",
+                           classes=(FAST, SLOW))
+    assert all(len(k) == 4 for k in d)
+    fast = d[("a", "ddp", "fast", 2)]
+    slow = d[("a", "ddp", "slow", 2)]
+    assert fast.device_class == "fast" and slow.device_class == "slow"
+    # speed_hint scales the roofline: the slow class is really slower
+    assert slow.step_time_s > fast.step_time_s
+    # single-class calls keep the legacy 3-tuple shape exactly
+    d3 = runner.profile_all(jobs, [1, 2], mode="napkin")
+    assert all(len(k) == 3 for k in d3)
+
+
+def test_per_class_hbm_feasibility():
+    tiny = DeviceClass("tiny", 1, 4, hbm_per_gpu=1e6, speed_hint=1.0)
+    jobs = [Job("a", CFG, 8, 64, 100)]
+    runner = TrialRunner(ParallelismLibrary(), HARDWARE["a100"])
+    d = runner.profile_all(jobs, [1, 2, 4], mode="napkin",
+                           classes=(FAST, tiny))
+    assert d[("a", "ddp", "fast", 2)].feasible
+    assert not d[("a", "ddp", "tiny", 2)].feasible   # 1 MB HBM
+
+
+def test_hardware_for_class_scaling():
+    hw = hardware_for_class(HARDWARE["a100"], SLOW)
+    assert hw.name == "slow"
+    assert hw.flops == pytest.approx(HARDWARE["a100"].flops * 0.4)
+    assert hw.hbm_capacity == 16e9
+
+
+def test_perfmodel_hetero_contract():
+    jobs = [Job("a", CFG, 8, 64, 100)]
+    runner = TrialRunner(ParallelismLibrary(), HARDWARE["a100"])
+    small = DeviceClass("small", 1, 4, 40e9, 0.5)
+    pm = runner.profile_all(jobs, list(range(1, 9)), mode="napkin",
+                            strategy="interpolate",
+                            classes=(FAST, small))
+    assert pm.hetero and pm.classes == ["fast", "small"]
+    assert all(len(k) == 4 for k in pm)
+    # counts truncate to each class's capacity
+    assert pm.counts_for("small")[-1] == 4
+    assert pm.counts_for("fast")[-1] == 8
+    # per-class curves answer any count; the half-speed class is slower
+    assert pm.step_time("a", "ddp", 3, "small") > \
+        pm.step_time("a", "ddp", 3, "fast")
+    # 4-tuple getitem, and anchors are class-qualified
+    p = pm[("a", "ddp", "small", 3)]
+    assert p.device_class == "small"
+    assert all(len(k) == 4 for k in pm.anchor_keys())
+    # a 3-tuple lookup cannot silently hit the wrong generation
+    with pytest.raises(KeyError):
+        pm[("a", "ddp", 3)]
+    # adapters
+    assert {dc for _, dc, _, _ in iter_job_class_profiles(pm, "a")} == \
+        {"fast", "small"}
+    fast_only = list(iter_job_profiles(pm, "a", device_class="fast"))
+    assert fast_only and all(g <= 8 for _, g, _ in fast_only)
+    assert step_time_of(pm, "a", "ddp", 3, "small") == \
+        pm.step_time("a", "ddp", 3, "small")
+
+
+def test_cache_version_bump_discards_old_schema(tmp_path):
+    path = tmp_path / "cache.json"
+    old = {"version": CACHE_VERSION - 1,
+           "profiles": [{"job": "a", "technique": "ddp", "n_devices": 2,
+                         "step_time_s": 1.0, "mem_per_device": 1e9,
+                         "feasible": True, "source": "napkin"}]}
+    path.write_text(json.dumps(old))
+    runner = TrialRunner(ParallelismLibrary(), HARDWARE["a100"],
+                         cache_path=str(path))
+    assert runner._cache == {}            # old cache discarded, not migrated
+    runner.profile(Job("a", CFG, 8, 64, 100), "ddp", 2, mode="napkin")
+    runner.flush()
+    fresh = json.loads(path.read_text())
+    assert fresh["version"] == CACHE_VERSION
+    assert fresh["profiles"][0]["device_class"] == DEFAULT_CLASS
+
+
+# ------------------------------------------------------------- class MILP
+
+def test_solve_joint_classes_respects_per_class_capacity():
+    jobs = [Job(f"j{i}", CFG, 8, 64, 100 + 40 * i) for i in range(5)]
+    profiles = mk_hetero_profiles(jobs)
+    sol = solve_joint_classes(jobs, profiles, HET, n_slots=12,
+                              time_limit_s=10)
+    assert {a.job for a in sol.assignments} == {j.name for j in jobs}
+    assert all(a.device_class in ("fast", "slow") for a in sol.assignments)
+    events = sorted({a.start_s for a in sol.assignments})
+    for t in events:
+        for dc in ("fast", "slow"):
+            used = sum(a.n_gpus for a in sol.assignments
+                       if a.device_class == dc
+                       and a.start_s <= t < a.end_s - 1e-9)
+            assert used <= 8, f"class {dc} overpacked at t={t}"
+    # the plan carries class pins into Schedule IR
+    sched = sol.to_schedule()
+    assert all(e.device_class is not None for e in sched.entries)
+    assert sched.entries[0].assignment[2] in ("fast", "slow")
+
+
+def test_class_runtime_matters_to_solver():
+    """One job, both classes idle: the solver must put it on the class
+    where it actually runs faster, not just any class with room."""
+    jobs = [Job("a", CFG, 8, 64, 100)]
+    profiles = mk_hetero_profiles(jobs, slow_factor=4.0)
+    sol = solve_joint_classes(jobs, profiles, HET, n_slots=8,
+                              time_limit_s=10)
+    assert sol.assignments[0].device_class == "fast"
+
+
+# ----------------------------------------------------------- runtime paths
+
+def test_runtime_pins_classes_and_conserves_per_class():
+    jobs = [Job(f"j{i}", CFG, 8, 64, 150 + 60 * i) for i in range(5)]
+    profiles = mk_hetero_profiles(jobs)
+    res = simulate(jobs, SaturnPolicy(n_slots=12, time_limit_s=5),
+                   profiles, HET, introspect_every_s=120, noise_sigma=0.3)
+    runs = [g for g in res.gantt if g.kind == "run"]
+    assert {g.job for g in runs} == {j.name for j in jobs}
+    ranges = HET.device_ranges()
+    for g in runs:
+        lo, hi = ranges[g.device_class]
+        assert all(lo <= d < hi for d in g.devices), \
+            f"{g.job} devices {g.devices} escaped class {g.device_class}"
+    # simulate() already ran verify_conservation; double-check per-class
+    # GPU-seconds from the Gantt against the device intervals
+    by_dev = {}
+    for g in runs:
+        for d in g.devices:
+            by_dev.setdefault(d, []).append((g.start_s, g.end_s))
+    for d, ivs in by_dev.items():
+        ivs.sort()
+        for (s1, e1), (s2, e2) in zip(ivs, ivs[1:]):
+            assert e1 <= s2 + 1e-9, f"device {d} double-booked"
+
+
+def test_class_blind_entries_skip_infeasible_class():
+    """An unpinned entry must not land on a class where the config is
+    not runnable (infinite estimated step time)."""
+    jobs = [Job("a", CFG, 8, 64, 100)]
+    profiles = {
+        ("a", "ddp", "fast", 2): Profile("a", "ddp", 2, float("inf"),
+                                         float("inf"), False, "t",
+                                         device_class="fast"),
+        ("a", "ddp", "slow", 2): Profile("a", "ddp", 2, 1.0, 1e9, True,
+                                         "t", device_class="slow"),
+    }
+
+    class Blind(Policy):
+        name = "blind"
+
+        def plan(self, jobs_, remaining, _p, cluster, current):
+            return Schedule([ScheduleEntry(j.name, "ddp", 2)
+                             for j in jobs_])
+
+    res = simulate(jobs, Blind(), profiles, HET, noise_sigma=0.0)
+    (run,) = [g for g in res.gantt if g.kind == "run"]
+    assert run.device_class == "slow"
+    assert all(8 <= d < 16 for d in run.devices)
+
+
+class MigrateOnTick(Policy):
+    """Plans the job on 'fast' until the first introspection tick, then
+    pins it to 'slow' forever (a single intended migration)."""
+
+    name = "migrate"
+    dynamic = True
+    replan_on_completion = False
+
+    def __init__(self):
+        self.plans = 0
+
+    def plan(self, jobs, remaining, profiles, cluster, current):
+        self.plans += 1
+        dc = "fast" if self.plans == 1 else "slow"
+        return Schedule([ScheduleEntry(j.name, "ddp", 2, device_class=dc)
+                         for j in jobs])
+
+
+def test_cross_class_migration_pays_exactly_one_restart():
+    """Satellite: an introspection replan that migrates a job across
+    device classes pays exactly one restart_cost_s and never
+    double-books a device."""
+    job = Job("a", CFG, 8, 64, total_steps=1000)
+    profiles = {
+        ("a", "ddp", "fast", 2): Profile("a", "ddp", 2, 1.0, 1e9, True,
+                                         "t", device_class="fast"),
+        ("a", "ddp", "slow", 2): Profile("a", "ddp", 2, 2.0, 1e9, True,
+                                         "t", device_class="slow"),
+    }
+    res = simulate([job], MigrateOnTick(), profiles, HET,
+                   introspect_every_s=100.0, noise_sigma=0.0)
+    assert res.restarts == 1
+    restarts = [g for g in res.gantt if g.kind == "restart"]
+    assert len(restarts) == 1
+    (rst,) = restarts
+    assert rst.end_s - rst.start_s == pytest.approx(HET.restart_cost_s)
+    runs = sorted((g for g in res.gantt if g.kind == "run"),
+                  key=lambda g: g.start_s)
+    assert [g.device_class for g in runs] == ["fast", "slow"]
+    assert all(0 <= d < 8 for d in runs[0].devices)
+    assert all(8 <= d < 16 for d in runs[1].devices)
+    # relaunch only after the restart window; devices never double-booked
+    assert runs[1].start_s >= rst.end_s - 1e-9
+    assert not set(runs[0].devices) & set(runs[1].devices)
+    # 100 steps done at 1 s/step, preempt at t=100, restart 10 s, then
+    # 900 steps at 2 s/step on the slow class
+    assert res.makespan_s == pytest.approx(100 + 10 + 900 * 2, abs=1e-6)
+
+
+def test_stable_class_assignment_does_not_restart():
+    """Replans that keep (technique, g, class) identical must not pay
+    restart penalties."""
+    class Stay(MigrateOnTick):
+        def plan(self, jobs, remaining, profiles, cluster, current):
+            return Schedule([ScheduleEntry(j.name, "ddp", 2,
+                                           device_class="fast")
+                             for j in jobs])
+
+    job = Job("a", CFG, 8, 64, total_steps=500)
+    profiles = mk_hetero_profiles([job], counts=(2,), techs=(("ddp", 1.0),))
+    res = simulate([job], Stay(), profiles, HET,
+                   introspect_every_s=50.0, noise_sigma=0.0)
+    assert res.restarts == 0
+
+
+# ----------------------------------------------------- baselines + session
+
+@pytest.mark.parametrize("policy_fn", [
+    lambda: CurrentPractice(),
+    lambda: RandomPolicy(1),
+    lambda: Optimus(),
+    lambda: OptimusDynamic(),
+])
+def test_baselines_complete_on_hetero_cluster(policy_fn):
+    jobs = [Job(f"j{i}", CFG, 8, 64, 120 + 30 * i) for i in range(5)]
+    profiles = mk_hetero_profiles(jobs)
+    pol = policy_fn()
+    res = simulate(jobs, pol, profiles, HET,
+                   introspect_every_s=200 if pol.dynamic else None,
+                   noise_sigma=0.1)
+    runs = [g for g in res.gantt if g.kind == "run"]
+    assert {g.job for g in runs} == {j.name for j in jobs}
+    assert {g.device_class for g in runs} <= {"fast", "slow"}
+
+
+def test_optimus_spends_both_class_budgets():
+    jobs = [Job(f"j{i}", CFG, 8, 64, 300) for i in range(4)]
+    profiles = mk_hetero_profiles(jobs, slow_factor=1.5)
+    sched = Optimus().plan(jobs, {j.name: 300 for j in jobs}, profiles,
+                           HET, {})
+    per_class = {}
+    for e in sched.entries:
+        per_class[e.device_class] = per_class.get(e.device_class, 0) \
+            + e.n_gpus
+        assert e.n_gpus <= 8
+    # with 4 big jobs and two 8-GPU pools, a single class cannot hold
+    # the allocation Optimus hands out
+    assert len(per_class) == 2
+
+
+def test_session_end_to_end_hetero():
+    from repro.core.api import SaturnSession
+    cluster = ClusterSpec(restart_cost_s=10.0, device_classes=(
+        DeviceClass("big", 1, 4, 40e9, 1.0),
+        DeviceClass("small", 1, 2, 16e9, 0.5)))
+    sess = SaturnSession(cluster)
+    assert "big" in sess.runner.hw_by_class
+    sess.submit([Job("a", CFG, 8, 64, 60), Job("b", CFG, 8, 64, 90)])
+    pm = sess.profile(mode="napkin")
+    assert pm.hetero
+    res = sess.run(policy=SaturnPolicy(n_slots=8, time_limit_s=5))
+    runs = [g for g in res.gantt if g.kind == "run"]
+    assert {g.job for g in runs} == {"a", "b"}
+    assert all(g.device_class in ("big", "small") for g in runs)
