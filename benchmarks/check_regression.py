@@ -26,11 +26,35 @@ GATED_METRICS = (
     "interp_err_median",
     "makespan_aware_s",
     "makespan_blind_s",
+    # BENCH_solver.json (scheduling core): makespan quality of the fast
+    # paths plus the wall-time ratios
+    "makespan_dense_s",
+    "makespan_refined_s",
+    "makespan_replan_incremental_s",
+    "wall_refined_over_dense",
+    "wall_incremental_over_scratch",
 )
+
+# per-metric tolerance overrides (take precedence over --tolerance):
+# wall ratios move with runner speed (a time-capped dense wall is a
+# constant while the refined wall scales), and the dense/scratch
+# makespans at the big tiers are time-limit INCUMBENTS, so both get
+# wide bands; the refined/incremental makespans come from gap-closed
+# solves and stay on the default tolerance
+TOLERANCE_OVERRIDES = {
+    "wall_refined_over_dense": 1.5,
+    # the incremental numerator is sub-second at the smaller capped
+    # tier, so runner-speed scaling needs more headroom; a broken warm
+    # start drives the ratio toward 1.0 and still fails by an order of
+    # magnitude
+    "wall_incremental_over_scratch": 3.0,
+    "makespan_dense_s": 0.5,
+}
 
 
 def collect(obj, prefix=""):
-    """Flatten nested dicts to {dotted.path: value} for gated metrics."""
+    """Flatten nested dicts to {dotted.path: (metric, value)} for gated
+    metrics (the metric name keeps per-metric tolerances applicable)."""
     out = {}
     if isinstance(obj, dict):
         for k, v in obj.items():
@@ -38,7 +62,7 @@ def collect(obj, prefix=""):
             if isinstance(v, dict):
                 out.update(collect(v, path))
             elif k in GATED_METRICS and isinstance(v, (int, float)):
-                out[path] = float(v)
+                out[path] = (k, float(v))
     return out
 
 
@@ -60,23 +84,24 @@ def main() -> int:
         return 0
 
     failures = []
-    for path, b in sorted(base.items()):
+    for path, (metric, b) in sorted(base.items()):
         if path not in fresh:
             print(f"FAIL {path}: missing from fresh run "
                   f"(scenario dropped?)")
             failures.append(path)
             continue
-        fv = fresh[path]
-        limit = b * (1.0 + args.tolerance)
+        _, fv = fresh[path]
+        tol = TOLERANCE_OVERRIDES.get(metric, args.tolerance)
+        limit = b * (1.0 + tol)
         status = "FAIL" if fv > limit else "ok"
         print(f"{status:4s} {path}: baseline={b:.4g} fresh={fv:.4g} "
-              f"(limit {limit:.4g})")
+              f"(limit {limit:.4g}, tol {tol:.0%})")
         if fv > limit:
             failures.append(path)
 
     if failures:
-        print(f"\n{len(failures)} metric(s) regressed beyond "
-              f"{100 * args.tolerance:.0f}%: {', '.join(failures)}")
+        print(f"\n{len(failures)} metric(s) regressed beyond tolerance: "
+              f"{', '.join(failures)}")
         return 1
     print("\nno regressions")
     return 0

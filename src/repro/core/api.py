@@ -116,14 +116,35 @@ class SaturnSession:
     def run(self, policy: Optional[Policy] = None,
             introspect_every_s: Optional[float] = 600.0,
             noise_sigma: float = 0.1,
-            placement: Optional[str] = None) -> SimResult:
+            placement: Optional[str] = None,
+            n_slots: Optional[int] = None,
+            time_limit_s: Optional[float] = None,
+            mip_gap: Optional[float] = None,
+            refine: Optional[bool] = None,
+            incremental: Optional[bool] = None) -> SimResult:
         """Solve + execute on the cluster runtime.
 
         ``placement`` overrides ``cluster.placement`` for this run.
+
+        The solver knobs (``n_slots``, ``time_limit_s``, ``mip_gap``,
+        ``refine``, ``incremental``) configure the default
+        :class:`SaturnPolicy` this call constructs; passing them
+        together with an explicit ``policy`` is an error — configure
+        the policy directly instead of having knobs silently ignored.
         """
+        knobs = {k: v for k, v in (("n_slots", n_slots),
+                                   ("time_limit_s", time_limit_s),
+                                   ("mip_gap", mip_gap),
+                                   ("refine", refine),
+                                   ("incremental", incremental))
+                 if v is not None}
+        if policy is not None and knobs:
+            raise ValueError(
+                f"solver knobs {sorted(knobs)} only apply to the default "
+                f"SaturnPolicy; configure your policy directly")
         if not self.profiles:
             self.profile()
-        policy = policy or SaturnPolicy()
+        policy = policy or SaturnPolicy(**knobs)
         cluster = self.cluster
         if placement is not None and placement != cluster.placement:
             # the policy must see the same placement the runtime enforces

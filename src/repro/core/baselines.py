@@ -25,7 +25,9 @@ import numpy as np
 from .job import Job
 from .perfmodel import iter_job_class_profiles, iter_job_profiles
 from .schedule import Policy, Schedule, ScheduleEntry
-from .solver import solve_joint, solve_joint_classes, solve_joint_nodes
+from .solver import (class_choice_map, pooled_choice_map, solve_joint,
+                     solve_joint_classes, solve_joint_nodes,
+                     solve_residual, split_fixed_running)
 
 
 def _is_hetero(cluster) -> bool:
@@ -339,38 +341,104 @@ class SaturnPolicy(Policy):
     heterogeneous cluster it comes from ``solve_joint_classes`` and
     pins each job to a device class — so an introspection replan may
     migrate a job across classes, paying the real restart penalty.
+
+    ``refine`` enables the solver's coarse-to-fine slot refinement;
+    ``incremental`` (default) makes replans warm-started: running jobs
+    whose current config cannot profitably be switched (best remaining
+    runtime + restart cost is no better) are fixed as capacity
+    reservations, the previous plan's start times window the residual
+    MILP, and only the residual (waiting jobs + remaining work) is
+    re-solved.  The node-aware MILP has no incremental path and replans
+    from scratch.
     """
 
     name = "saturn"
     dynamic = True
     replan_on_completion = False  # paper: re-solve on fixed intervals
 
-    def __init__(self, n_slots: int = 24, time_limit_s: float = 10.0):
+    def __init__(self, n_slots: int = 24, time_limit_s: float = 10.0, *,
+                 mip_gap: float = 0.05, refine: bool = False,
+                 incremental: bool = True):
         self.n_slots = n_slots
         self.time_limit_s = time_limit_s
+        self.mip_gap = mip_gap
+        self.refine = refine
+        self.incremental = incremental
+        self._last_plan_t = 0.0
+
+    @staticmethod
+    def _live(jobs, remaining):
+        return [Job(j.name, j.cfg, j.batch_size, j.seq_len,
+                    remaining.get(j.name, j.total_steps), j.lr, j.seed)
+                for j in jobs if remaining.get(j.name, j.total_steps) > 0]
+
+    def _choice_map(self, live, profiles, cluster):
+        """Per-job choice lists, class-qualified on heterogeneous
+        clusters — the SAME builders the full solvers use, so the
+        incremental replan optimizes over an identical space."""
+        if _is_hetero(cluster):
+            return class_choice_map(live, profiles,
+                                    cluster.device_classes)
+        return (pooled_choice_map(live, profiles),
+                {None: int(cluster.total_gpus)})
 
     def plan(self, jobs, remaining, profiles, cluster, current):
-        live = []
-        for j in jobs:
-            rem = remaining.get(j.name, j.total_steps)
-            if rem > 0:
-                live.append(Job(j.name, j.cfg, j.batch_size, j.seq_len,
-                                rem, j.lr, j.seed))
+        live = self._live(jobs, remaining)
         if not live:
             return Schedule([], solver=self.name)
         if _is_hetero(cluster):
             sol = solve_joint_classes(
                 live, profiles, cluster, n_slots=min(self.n_slots, 20),
-                time_limit_s=self.time_limit_s, mip_gap=0.05)
+                time_limit_s=self.time_limit_s, mip_gap=self.mip_gap,
+                refine=self.refine)
         elif getattr(cluster, "placement", "flat") == "node":
             sol = solve_joint_nodes(
                 live, profiles, cluster.nodes, cluster.gpus_per_node,
                 n_slots=min(self.n_slots, 16),
-                time_limit_s=self.time_limit_s, mip_gap=0.05)
+                time_limit_s=self.time_limit_s, mip_gap=self.mip_gap)
         else:
             sol = solve_joint(live, profiles, cluster.total_gpus,
                               n_slots=self.n_slots,
-                              time_limit_s=self.time_limit_s, mip_gap=0.05)
+                              time_limit_s=self.time_limit_s,
+                              mip_gap=self.mip_gap, refine=self.refine)
+        return sol.to_schedule()
+
+    def plan_incremental(self, jobs, remaining, profiles, cluster,
+                         current, *, prev=None, now_s=0.0,
+                         running=frozenset()):
+        if now_s < self._last_plan_t:
+            # clock went backwards: the policy instance is being reused
+            # for a fresh simulation — stale plan times must not shift
+            # (or fail to shift) this run's warm windows
+            self._last_plan_t = now_s
+        elapsed = now_s - self._last_plan_t
+        self._last_plan_t = now_s
+        if not self.incremental or not running or prev is None \
+                or not len(prev) \
+                or getattr(cluster, "placement", "flat") == "node":
+            return self.plan(jobs, remaining, profiles, cluster, current)
+        live = self._live(jobs, remaining)
+        if not live:
+            return Schedule([], solver=self.name)
+        choice_map, budgets = self._choice_map(live, profiles, cluster)
+        fixed, residual = split_fixed_running(
+            live, remaining, current, running, choice_map, profiles,
+            cluster.restart_cost_s)
+        if not residual:
+            # every running job keeps its config; nothing to re-solve
+            sol = solve_residual([], choice_map, budgets, fixed)
+            return sol.to_schedule()
+        # warm incumbent: the previous plan's starts, shifted to now
+        residual_names = {j.name for j in residual}
+        warm = {e.job: max(0.0, e.start_s - elapsed)
+                for e in prev.entries
+                if e.start_s is not None and e.job in residual_names}
+        n_slots = min(self.n_slots, 20) if _is_hetero(cluster) \
+            else self.n_slots
+        sol = solve_residual(
+            residual, choice_map, budgets, fixed, n_slots=n_slots,
+            time_limit_s=self.time_limit_s, mip_gap=self.mip_gap,
+            warm_starts=warm or None)
         return sol.to_schedule()
 
 

@@ -20,7 +20,12 @@ discrete-event simulation over :mod:`.events`:
   cancel out;
 - an introspection replan may migrate a job across device classes: the
   assignment diff includes the class, so the job pays exactly one
-  restart penalty and relaunches from the new class's pool.
+  restart penalty and relaunches from the new class's pool;
+- replans are warm-start-capable: the engine hands the previous
+  Schedule, the current time and the running set to
+  :meth:`Policy.plan_incremental`, so a policy can fix running jobs in
+  place and re-solve only the residual (SaturnPolicy does; the default
+  delegates to ``plan`` and reproduces the historical behavior exactly).
 
 The simulator separates *estimated* step times (what policies see, from
 the Trial Runner — either an exhaustive profile dict or a curve-backed
@@ -305,9 +310,13 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
         live = state.live_jobs()
         if not live:
             return
-        order = Schedule.coerce(policy.plan(
+        # warm-start-capable policies get the previous schedule, the
+        # current time and the running set and may re-solve only the
+        # residual; the default delegates to plan() unchanged
+        order = Schedule.coerce(policy.plan_incremental(
             live, dict(state.remaining), profiles, cluster,
-            dict(state.current_assign)))
+            dict(state.current_assign), prev=order, now_s=state.t,
+            running=frozenset(state.running)))
         replans += 1
         if preempt:
             new_assign = order.assignment_map()

@@ -143,3 +143,20 @@ class Policy:
     def plan(self, jobs, remaining: Dict[str, int], profiles, cluster,
              current: Dict[str, Tuple[str, int]]) -> "Schedule":
         raise NotImplementedError
+
+    def plan_incremental(self, jobs, remaining: Dict[str, int], profiles,
+                         cluster, current: Dict[str, Tuple], *,
+                         prev: Optional["Schedule"] = None,
+                         now_s: float = 0.0,
+                         running=frozenset()) -> "Schedule":
+        """Replan hook with warm-start context.
+
+        The runtime calls this (not ``plan``) on every replan, handing
+        over the previous :class:`Schedule` (``prev``), the current sim
+        time and the set of currently RUNNING job names.  The default
+        ignores the context and replans from scratch — exactly the
+        historical behavior, so existing policies are untouched.
+        Policies that can re-solve incrementally (fix running jobs,
+        warm-start from ``prev``) override this.
+        """
+        return self.plan(jobs, remaining, profiles, cluster, current)

@@ -10,14 +10,35 @@ for HiGHS via ``scipy.optimize.milp`` — same MILP, different solver):
 
   min  M + eps * sum t*x                    (eps tie-breaks earlier starts)
   s.t. sum_{c,t} x[j,c,t] = 1               for every job j
-       sum_{j,c} g_c * sum_{t in (tau-d_c, tau]} x[j,c,t] <= G   for all tau
-       (t + d_jc) * delta * x[j,c,t] <= M   for all j,c,t
+       sum_{j,c} g_c * sum_{t in (tau-d_c, tau]} x[j,c,t] <= cap(pool, tau)
+       sum_{c,t} (t + d_jc) * delta * x[j,c,t] <= M     for every job j
 
-The flat MILP (``solve_joint``) and the node-locality MILP
-(``solve_joint_nodes``) share one constraint builder (:class:`_MilpBuilder`)
-and both emit Schedule IR via :meth:`Solution.to_schedule` — the
-node-aware solution carries per-job node assignments the runtime's
-NodeAware placement backend honors.
+(The makespan rows are aggregated per job: with the assignment equality
+in place the weighted sum equals the chosen end exactly, and the LP
+relaxation is *tighter* than one big-M row per binary — n_jobs rows
+instead of one per variable.)
+
+The scheduling core is built for scale:
+
+- Constraint assembly is fully vectorized: per-variable attributes live
+  in flat numpy arrays and every constraint family is emitted as one
+  bulk COO block (``_MilpBuilder.add_block``) — no per-term Python
+  loops, so assembly stays negligible next to the solve itself.
+- ``refine=True`` runs a coarse-to-fine pass: solve on a coarse slot
+  grid first, then re-solve on the fine grid with each job's start
+  variables restricted to a window around the coarse incumbent's start
+  — cutting the binary count roughly ``n_slots / coarse_slots``-fold.
+- :func:`solve_residual` is the warm-started incremental replan: jobs
+  that are running and provably not worth preempting become capacity
+  *reservations* instead of variables, the previous solution's start
+  times seed per-job refinement windows, and the greedy bound is
+  installed as an upper bound on the makespan variable so HiGHS can
+  early-exit on gap.
+
+The flat MILP (``solve_joint``), the class-aware MILP
+(``solve_joint_classes``) and the node-locality MILP
+(``solve_joint_nodes``) share the one builder and all emit Schedule IR
+via :meth:`Solution.to_schedule`.
 
 A greedy list-scheduling fallback guards against solver timeouts (and is
 also used to compute an upper bound that sizes the horizon).
@@ -28,6 +49,7 @@ import contextlib
 import dataclasses
 import math
 import os
+from collections import OrderedDict
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
@@ -81,7 +103,8 @@ class Assignment:
 class Solution:
     assignments: List[Assignment]
     makespan_s: float
-    solver: str               # "milp" | "milp-nodes" | "milp-classes" | "greedy"
+    solver: str     # "milp" | "milp-nodes" | "milp-classes" |
+    #                 "milp-incremental" | "greedy" | "greedy-incremental"
     milp_status: Optional[str] = None
 
     def order(self) -> List[Assignment]:
@@ -97,54 +120,76 @@ class Solution:
                         makespan_s=self.makespan_s)
 
 
+def _pool_of(choice: Choice, budgets) -> Optional[str]:
+    """Which budget pool a choice draws from: its device class when that
+    class has its own budget, else the pooled ``None`` key."""
+    return choice.device_class if choice.device_class in budgets else None
+
+
 # ------------------------------------------------- shared MILP machinery
 
 class _MilpBuilder:
     """Accumulates sparse linear constraints + runs the HiGHS MILP.
 
     Both joint formulations are "binary start variables + one continuous
-    makespan var"; this builder owns the shared mechanics (sparse
-    triplets, row bounds, bounds/integrality vectors, solver call) so
-    the two solvers only differ in which constraints they emit.
+    makespan var"; this builder owns the shared mechanics (COO blocks,
+    row bounds, bounds/integrality vectors, solver call) so the solvers
+    only differ in which constraints they emit.  Constraints arrive as
+    whole numpy blocks (:meth:`add_block`) — per-term Python loops are
+    the scaling killer the vectorized assembly replaces.
     """
 
     def __init__(self, n_binary: int):
         self.n_binary = n_binary
         self.nvar = n_binary + 1          # + makespan, always last
         self.M_idx = n_binary
-        self._rows: List[int] = []
-        self._cols: List[int] = []
-        self._vals: List[float] = []
-        self._lbs: List[float] = []
-        self._ubs: List[float] = []
+        self._row_chunks: List[np.ndarray] = []
+        self._col_chunks: List[np.ndarray] = []
+        self._val_chunks: List[np.ndarray] = []
+        self._lb_chunks: List[np.ndarray] = []
+        self._ub_chunks: List[np.ndarray] = []
         self._r = 0
+
+    def add_block(self, rows, cols, vals, lbs, ubs) -> None:
+        """Bulk-append constraint rows.  ``rows`` holds LOCAL row ids
+        0..len(lbs)-1 (offset internally); ``cols``/``vals`` are the COO
+        triplets, one entry per nonzero."""
+        lbs = np.atleast_1d(np.asarray(lbs, dtype=np.float64))
+        self._row_chunks.append(
+            np.asarray(rows, dtype=np.int64) + self._r)
+        self._col_chunks.append(np.asarray(cols, dtype=np.int64))
+        self._val_chunks.append(np.asarray(vals, dtype=np.float64))
+        self._lb_chunks.append(lbs)
+        self._ub_chunks.append(np.atleast_1d(np.asarray(ubs, np.float64)))
+        self._r += len(lbs)
 
     def add(self, terms: Iterable[Tuple[int, float]],
             lb: float, ub: float) -> None:
         """One constraint row: lb <= sum coef*x[col] <= ub."""
-        for col, coef in terms:
-            self._rows.append(self._r)
-            self._cols.append(col)
-            self._vals.append(coef)
-        self._lbs.append(lb)
-        self._ubs.append(ub)
-        self._r += 1
-
-    def add_makespan(self, var: int, end_s: float) -> None:
-        """end_s * x[var] - M <= 0."""
-        self.add([(var, end_s), (self.M_idx, -1.0)], -np.inf, 0.0)
+        terms = list(terms)
+        self.add_block(np.zeros(len(terms), dtype=np.int64),
+                       [c for c, _ in terms], [v for _, v in terms],
+                       [lb], [ub])
 
     def solve(self, cvec: np.ndarray, *, time_limit_s: float,
-              mip_gap: float):
-        """Run HiGHS; returns the scipy result or None on failure."""
+              mip_gap: float, m_upper: float = np.inf):
+        """Run HiGHS; returns the scipy result or None on failure.
+
+        ``m_upper`` bounds the makespan variable — installing a known
+        feasible makespan (e.g. the greedy incumbent's) lets the solver
+        prune and exit early on gap."""
         A = sparse.coo_matrix(
-            (self._vals, (self._rows, self._cols)),
+            (np.concatenate(self._val_chunks),
+             (np.concatenate(self._row_chunks),
+              np.concatenate(self._col_chunks))),
             shape=(self._r, self.nvar)).tocsc()
-        cons = LinearConstraint(A, np.array(self._lbs), np.array(self._ubs))
+        cons = LinearConstraint(A, np.concatenate(self._lb_chunks),
+                                np.concatenate(self._ub_chunks))
         integrality = np.ones(self.nvar)
         integrality[self.M_idx] = 0
         bounds = Bounds(np.zeros(self.nvar),
-                        np.concatenate([np.ones(self.n_binary), [np.inf]]))
+                        np.concatenate([np.ones(self.n_binary),
+                                        [m_upper]]))
         try:
             with _quiet_stdout():
                 res = milp(c=cvec, constraints=cons,
@@ -154,9 +199,66 @@ class _MilpBuilder:
                                     "presolve": True})
         except Exception:
             return None
-        if not res.success or res.x is None:
+        # status 0 = optimal, 1 = iteration/time limit: a limit-hit run
+        # still carries its best integral incumbent in res.x — keep it
+        # (callers fall back to the greedy bound when it's worse anyway)
+        if res.x is None or res.status not in (0, 1):
             return None
         return res
+
+
+# --------------------------------------------------------- choice cache
+
+class _ChoiceCache:
+    """Memoizes the per-step-time (technique, g, step_time) sweep behind
+    :func:`choices_from_profiles`, keyed on profiles-object identity.
+
+    Replans re-derive the same choice lists on every introspection
+    event; with a curve-backed PerfModel each derivation walks the whole
+    dense count grid.  The cache pins a strong reference to each
+    profiles object it has seen (so ``id()`` cannot be recycled
+    underneath it) and invalidates on ``len()`` change — the way test
+    fixtures and planners actually mutate profile dicts (adding keys).
+    Replacing a value in place for an existing key is NOT detected;
+    nothing in the repo does that.
+    """
+
+    def __init__(self, max_entries: int = 8):
+        self.max_entries = max_entries
+        self._store: "OrderedDict[int, tuple]" = OrderedDict()
+
+    def per_step(self, profiles, job_name: str,
+                 device_class: Optional[str]) -> List[Tuple[str, int, float]]:
+        from .perfmodel import iter_job_profiles
+        key = id(profiles)
+        n = len(profiles)
+        ent = self._store.get(key)
+        if ent is None or ent[0] is not profiles or ent[1] != n:
+            ent = (profiles, n, {})
+            self._store[key] = ent
+            while len(self._store) > self.max_entries:
+                self._store.popitem(last=False)
+        else:
+            self._store.move_to_end(key)   # LRU: hits refresh recency
+        sub = ent[2]
+        k = (job_name, device_class)
+        if k not in sub:
+            sub[k] = [(tech, g, p.step_time_s)
+                      for tech, g, p in iter_job_profiles(
+                          profiles, job_name, device_class=device_class)
+                      if p.feasible]
+        return sub[k]
+
+    def clear(self) -> None:
+        self._store.clear()
+
+
+_CHOICE_CACHE = _ChoiceCache()
+
+
+def clear_choice_cache() -> None:
+    """Drop all memoized choice lists (test hook)."""
+    _CHOICE_CACHE.clear()
 
 
 def choices_from_profiles(job: Job, profiles, *, prune: bool = True,
@@ -170,18 +272,17 @@ def choices_from_profiles(job: Job, profiles, *, prune: bool = True,
     over every count in the model's grid even though only the anchor
     counts were actually profiled.  Enumeration goes through
     ``iter_job_profiles`` so the solver sees exactly the grid the
-    policies see.
+    policies see — and is memoized per (profiles identity, job, class),
+    so introspection replans stop re-walking the curve grid.
 
     prune=True drops Pareto-dominated choices (same or more GPUs, same or
     worse runtime) — a large constant-factor MILP size reduction that
     does not change the optimum.
     """
-    from .perfmodel import iter_job_profiles
-    out = [Choice(tech, g, p.step_time_s * job.total_steps,
+    per_step = _CHOICE_CACHE.per_step(profiles, job.name, device_class)
+    out = [Choice(tech, g, st * job.total_steps,
                   device_class=device_class)
-           for tech, g, p in iter_job_profiles(profiles, job.name,
-                                               device_class=device_class)
-           if p.feasible]
+           for tech, g, st in per_step]
     if prune and out:
         out.sort(key=lambda c: (c.n_gpus, c.runtime_s))
         kept: List[Choice] = []
@@ -194,56 +295,99 @@ def choices_from_profiles(job: Job, profiles, *, prune: bool = True,
     return out
 
 
+def pooled_choice_map(jobs: List[Job], profiles
+                      ) -> Dict[str, List[Choice]]:
+    """Per-job pruned choice lists on the single pooled budget; raises
+    when a job has no feasible config (shared by the flat MILP and the
+    incremental replan so both optimize over the same space)."""
+    cm = {j.name: choices_from_profiles(j, profiles) for j in jobs}
+    for j in jobs:
+        if not cm[j.name]:
+            raise ValueError(f"job {j.name}: no feasible (technique, g)")
+    return cm
+
+
+def class_choice_map(jobs: List[Job], profiles, classes
+                     ) -> Tuple[Dict[str, List[Choice]],
+                                Dict[Optional[str], int]]:
+    """Per-job class-qualified choice lists + per-class budgets: each
+    job's space is the union over device classes of its feasible
+    choices ON that class, budget-filtered (shared by the class MILP
+    and the incremental replan)."""
+    budgets: Dict[Optional[str], int] = {dc.name: dc.total_gpus
+                                         for dc in classes}
+    cm: Dict[str, List[Choice]] = {}
+    for j in jobs:
+        cs: List[Choice] = []
+        for dc in classes:
+            cs.extend(choices_from_profiles(j, profiles,
+                                            device_class=dc.name))
+        cs = [c for c in cs if c.n_gpus <= budgets[c.device_class]]
+        if not cs:
+            raise ValueError(
+                f"job {j.name}: no feasible (technique, g, class)")
+        cm[j.name] = cs
+    return cm, budgets
+
+
 def greedy_schedule(jobs: List[Job], choices: Dict[str, List[Choice]],
-                    total_gpus) -> Solution:
+                    total_gpus, reserved: Iterable[Tuple] = ()
+                    ) -> Solution:
     """List scheduling: longest-remaining-work first, each job on its
     best-throughput feasible choice that fits when it starts.
 
     ``total_gpus`` is either a single pooled budget (int — the legacy
     flat cluster) or per-device-class budgets (``{class_name: gpus}``);
     with budgets, each Choice draws from its own class's pool.
+
+    ``reserved`` pre-loads running allocations the schedule must work
+    around: ``(device_class_or_None, n_gpus, release_s)`` triples whose
+    GPUs only free up at ``release_s`` — the incremental replan's view
+    of jobs it decided not to preempt.
     """
     if isinstance(total_gpus, dict):
         free = dict(total_gpus)
     else:
         free = {None: int(total_gpus)}
 
-    def pool(c: Choice):
-        return c.device_class if c.device_class in free else None
+    # (release time, gpus, pool) for everything currently holding GPUs
+    running: List[Tuple[float, int, Optional[str]]] = []
+    for dc, g, release_s in reserved:
+        key = dc if dc in free else None
+        free[key] -= int(g)
+        running.append((float(release_s), int(g), key))
 
     # rank jobs by their best-possible runtime, longest first
     ranked = sorted(
         jobs, key=lambda j: -min((c.runtime_s for c in choices[j.name]),
                                  default=0.0))
     t = 0.0
-    running: List[Tuple[float, Assignment]] = []
     out: List[Assignment] = []
     queue = list(ranked)
-    while queue or running:
+    while queue:
         progressed = True
         while progressed and queue:
             progressed = False
             for job in list(queue):
                 fits = [c for c in choices[job.name]
-                        if c.n_gpus <= free[pool(c)]]
+                        if c.n_gpus <= free[_pool_of(c, free)]]
                 if fits:
                     c = min(fits, key=lambda c: c.runtime_s)
                     a = Assignment(job.name, c.technique, c.n_gpus, t,
                                    c.runtime_s, device_class=c.device_class)
                     out.append(a)
-                    running.append((a.end_s, a))
-                    free[pool(c)] -= c.n_gpus
+                    running.append((a.end_s, c.n_gpus, _pool_of(c, free)))
+                    free[_pool_of(c, free)] -= c.n_gpus
                     queue.remove(job)
                     progressed = True
-        if not running:
-            if queue:  # nothing fits at all — infeasible choice sets
-                raise RuntimeError("greedy: no feasible choice fits cluster")
+        if not queue:
             break
+        if not running:
+            raise RuntimeError("greedy: no feasible choice fits cluster")
         running.sort(key=lambda x: x[0])
-        t_end, done = running.pop(0)
+        t_end, g_rel, key = running.pop(0)
         t = t_end
-        key = done.device_class if done.device_class in free else None
-        free[key] += done.n_gpus
+        free[key] += g_rel
     makespan = max((a.end_s for a in out), default=0.0)
     return Solution(out, makespan, "greedy")
 
@@ -253,78 +397,124 @@ def _solve_time_indexed(jobs: List[Job],
                         budgets: Dict[Optional[str], int],
                         ub: Solution, solver_name: str, *,
                         n_slots: int, time_limit_s: float,
-                        mip_gap: float) -> Solution:
+                        mip_gap: float,
+                        horizon: Optional[float] = None,
+                        start_windows: Optional[Dict[str, float]] = None,
+                        window_pad_s: float = 0.0,
+                        reserved: Iterable[Tuple] = (),
+                        m_upper: float = np.inf) -> Solution:
     """The shared time-indexed MILP core behind ``solve_joint`` (one
-    pooled budget under the ``None`` key) and ``solve_joint_classes``
-    (one budget per device class): binary start variables x[j, c, t],
-    capacity rows per (budget pool, slot), a continuous makespan var,
-    and an eps tie-break toward earlier starts.  Falls back to the
-    greedy upper bound ``ub`` on infeasibility/timeout."""
-    horizon = max(ub.makespan_s, 1e-6) * 1.05
+    pooled budget under the ``None`` key), ``solve_joint_classes`` (one
+    budget per device class) and ``solve_residual``.
+
+    Assembly is vectorized: variables are described by flat arrays
+    (job index, slot, duration, GPUs, pool) built once, and every
+    constraint family — assignment, per-(pool, slot) capacity,
+    per-job makespan — lands as one bulk COO block.
+
+    ``start_windows`` restricts a job's start slots to
+    ``center ± window_pad_s`` (seconds) — the coarse-to-fine refinement
+    and the warm-started replan both ride on it; a job whose window
+    admits no start falls back to the full range.  ``reserved`` entries
+    ``(pool, gpus, until_s)`` shrink capacity rows for the slots they
+    cover (running jobs the incremental replan keeps in place).
+    ``m_upper`` bounds the makespan variable (a known-feasible
+    incumbent's value) so HiGHS can early-exit on gap.
+
+    Falls back to the upper bound ``ub`` on infeasibility/timeout.
+    """
+    if horizon is None:
+        horizon = max(ub.makespan_s, 1e-6) * 1.05
     delta = horizon / n_slots
+    pools = list(budgets.keys())
+    pool_idx = {p: i for i, p in enumerate(pools)}
+    n_jobs = len(jobs)
 
-    def pool(c: Choice) -> Optional[str]:
-        return c.device_class if c.device_class in budgets else None
-
-    # variable layout: x[j, c, t] flattened, then M last
-    index: List[Tuple[int, Choice, int]] = []   # (job_idx, choice, slot)
-    var_of: Dict[Tuple[int, int, int], int] = {}
-    dur_of: Dict[int, int] = {}
+    # ---- variable layout: one flat array per attribute, then M last
+    ji_ch, ci_ch, t_ch, dur_ch, g_ch, pool_ch = [], [], [], [], [], []
     for ji, j in enumerate(jobs):
+        win = (start_windows or {}).get(j.name)
         for ci, c in enumerate(choice_map[j.name]):
             dur = max(1, math.ceil(c.runtime_s / delta - 1e-9))
             if dur > n_slots:
                 continue
-            for t in range(n_slots - dur + 1):
-                var_of[(ji, ci, t)] = len(index)
-                dur_of[len(index)] = dur
-                index.append((ji, c, t))
-    nx = len(index)
+            tmax = n_slots - dur
+            if win is not None:
+                lo = max(0, int(math.floor((win - window_pad_s) / delta)))
+                hi = min(tmax, int(math.ceil((win + window_pad_s) / delta)))
+                ts = np.arange(lo, hi + 1) if lo <= hi \
+                    else np.arange(tmax + 1)
+            else:
+                ts = np.arange(tmax + 1)
+            ji_ch.append(np.full(ts.size, ji))
+            ci_ch.append(np.full(ts.size, ci))
+            t_ch.append(ts)
+            dur_ch.append(np.full(ts.size, dur))
+            g_ch.append(np.full(ts.size, c.n_gpus))
+            pool_ch.append(np.full(ts.size, pool_idx[_pool_of(c, budgets)]))
+    if not t_ch:
+        return ub
+    ji_all = np.concatenate(ji_ch)
+    ci_all = np.concatenate(ci_ch)
+    t_all = np.concatenate(t_ch)
+    dur_all = np.concatenate(dur_ch)
+    g_all = np.concatenate(g_ch).astype(np.float64)
+    pool_all = np.concatenate(pool_ch)
+    nx = ji_all.size
+    end_all = (t_all + dur_all) * delta
+
+    if (np.bincount(ji_all, minlength=n_jobs) == 0).any():
+        return ub                 # some job's every choice outlasts horizon
 
     b = _MilpBuilder(nx)
     # (1) each job picks exactly one (choice, start)
-    for ji in range(len(jobs)):
-        terms = [(vi, 1.0) for (ji2, ci, t), vi in var_of.items()
-                 if ji2 == ji]
-        if not terms:
-            return ub          # some job's every choice outlasts horizon
-        b.add(terms, 1.0, 1.0)
-    # (2) capacity per (budget pool, slot)
-    for pkey, cap in budgets.items():
-        for tau in range(n_slots):
-            terms = []
-            for (ji, ci, t), vi in var_of.items():
-                c = choice_map[jobs[ji].name][ci]
-                if pool(c) == pkey and t <= tau < t + dur_of[vi]:
-                    terms.append((vi, float(c.n_gpus)))
-            if terms:
-                b.add(terms, -np.inf, float(cap))
-    # (3) makespan: (t + dur)*delta * x - M <= 0
-    for (ji, ci, t), vi in var_of.items():
-        b.add_makespan(vi, (t + dur_of[vi]) * delta)
+    b.add_block(ji_all, np.arange(nx), np.ones(nx),
+                np.ones(n_jobs), np.ones(n_jobs))
+    # (2) capacity per (budget pool, slot), minus reservations
+    cap_ub = np.repeat(np.array([float(budgets[p]) for p in pools]),
+                       n_slots)
+    for dc, g_res, until_s in reserved:
+        p = pool_idx[dc if dc in budgets else None]
+        k = min(n_slots, max(0, int(math.ceil(until_s / delta - 1e-9))))
+        cap_ub[p * n_slots:p * n_slots + k] -= float(g_res)
+    np.maximum(cap_ub, 0.0, out=cap_ub)
+    reps = dur_all
+    occ_var = np.repeat(np.arange(nx), reps)    # var of each occupancy
+    offs = np.repeat(np.cumsum(reps) - reps, reps)
+    taus = np.repeat(t_all, reps) + (np.arange(int(reps.sum())) - offs)
+    b.add_block(pool_all[occ_var] * n_slots + taus, occ_var,
+                g_all[occ_var],
+                np.full(len(pools) * n_slots, -np.inf), cap_ub)
+    # (3) makespan, aggregated per job: sum end*x - M <= 0 (exact under
+    # the assignment equality, and a tighter relaxation than per-var)
+    b.add_block(np.concatenate([ji_all, np.arange(n_jobs)]),
+                np.concatenate([np.arange(nx),
+                                np.full(n_jobs, b.M_idx)]),
+                np.concatenate([end_all, -np.ones(n_jobs)]),
+                np.full(n_jobs, -np.inf), np.zeros(n_jobs))
 
     cvec = np.zeros(b.nvar)
     cvec[b.M_idx] = 1.0
-    eps = delta * 1e-4
-    for key, vi in var_of.items():
-        cvec[vi] = eps * key[2]
-    res = b.solve(cvec, time_limit_s=time_limit_s, mip_gap=mip_gap)
+    cvec[:nx] = (delta * 1e-4) * t_all
+    res = b.solve(cvec, time_limit_s=time_limit_s, mip_gap=mip_gap,
+                  m_upper=m_upper)
     if res is None:
         return ub
-    x = res.x
-    key_of = {vi: key for key, vi in var_of.items()}
+    xb = res.x[:nx]
+    pick: Dict[int, int] = {}
+    for vi in np.flatnonzero(xb > 0.5):
+        ji = int(ji_all[vi])
+        if ji not in pick or xb[vi] > xb[pick[ji]]:
+            pick[ji] = int(vi)
+    if len(pick) != n_jobs:
+        return ub
     assignments = []
     for ji, j in enumerate(jobs):
-        best_vi, best_val = None, 0.5
-        for (ji2, ci, t), vi in var_of.items():
-            if ji2 == ji and x[vi] > best_val:
-                best_vi, best_val = vi, x[vi]
-        if best_vi is None:
-            return ub
-        _, ci, t = key_of[best_vi]
-        c = choice_map[j.name][ci]
+        vi = pick[ji]
+        c = choice_map[j.name][int(ci_all[vi])]
         assignments.append(Assignment(j.name, c.technique, c.n_gpus,
-                                      t * delta, c.runtime_s,
+                                      float(t_all[vi]) * delta,
+                                      c.runtime_s,
                                       device_class=c.device_class))
     makespan = max(a.end_s for a in assignments)
     sol = Solution(assignments, makespan, solver_name,
@@ -333,19 +523,64 @@ def _solve_time_indexed(jobs: List[Job],
     return sol if makespan <= ub.makespan_s + 1e-6 else ub
 
 
+# below this estimated binary count the dense MILP is already cheap and
+# exact — refinement would only risk quality for no wall-time win
+_REFINE_MIN_BINARIES = 1000
+
+
+def _solve_refined(jobs, choice_map, budgets, ub, solver_name, *,
+                   n_slots, coarse_slots, time_limit_s, mip_gap):
+    """Coarse-to-fine: solve on ``coarse_slots`` first, then on the full
+    ``n_slots`` grid with each job's starts windowed one coarse slot
+    around the incumbent's start — roughly a
+    ``n_slots / coarse_slots``-fold binary-count cut.
+
+    Small instances (estimated binaries below ``_REFINE_MIN_BINARIES``)
+    skip the refinement and solve dense: they are fast anyway and the
+    dense answer is exact."""
+    est_binaries = sum(len(choice_map[j.name]) for j in jobs) * n_slots
+    if n_slots <= coarse_slots or est_binaries < _REFINE_MIN_BINARIES:
+        return _solve_time_indexed(
+            jobs, choice_map, budgets, ub, solver_name, n_slots=n_slots,
+            time_limit_s=time_limit_s, mip_gap=mip_gap)
+    horizon = max(ub.makespan_s, 1e-6) * 1.05
+    # budget split keeps the refined path's TOTAL wall under the dense
+    # path's single time limit even when both stages hit their caps
+    coarse = _solve_time_indexed(
+        jobs, choice_map, budgets, ub, solver_name,
+        n_slots=coarse_slots, time_limit_s=0.3 * time_limit_s,
+        mip_gap=mip_gap, horizon=horizon)
+    windows = {a.job: a.start_s for a in coarse.assignments}
+    ub2 = coarse if coarse.makespan_s < ub.makespan_s else ub
+    return _solve_time_indexed(
+        jobs, choice_map, budgets, ub2, solver_name, n_slots=n_slots,
+        time_limit_s=0.7 * time_limit_s, mip_gap=mip_gap,
+        horizon=horizon, start_windows=windows,
+        window_pad_s=horizon / coarse_slots)
+
+
 def solve_joint(jobs: List[Job],
                 profiles: Dict[Tuple[str, str, int], Profile],
                 total_gpus: int, *,
                 n_slots: int = 24,
                 time_limit_s: float = 30.0,
-                mip_gap: float = 0.02) -> Solution:
-    """The joint MILP.  Falls back to greedy on infeasibility/timeout."""
-    choice_map = {j.name: choices_from_profiles(j, profiles) for j in jobs}
-    for j in jobs:
-        if not choice_map[j.name]:
-            raise ValueError(f"job {j.name}: no feasible (technique, g)")
+                mip_gap: float = 0.02,
+                refine: bool = False,
+                coarse_slots: int = 8) -> Solution:
+    """The joint MILP.  Falls back to greedy on infeasibility/timeout.
+
+    ``refine=True`` enables the coarse-to-fine pass (solve on
+    ``coarse_slots``, re-solve on ``n_slots`` restricted to windows
+    around the incumbent) — the fast path for large job counts.
+    """
+    choice_map = pooled_choice_map(jobs, profiles)
     ub = greedy_schedule(jobs, choice_map, total_gpus)
-    return _solve_time_indexed(jobs, choice_map, {None: int(total_gpus)},
+    budgets = {None: int(total_gpus)}
+    if refine:
+        return _solve_refined(jobs, choice_map, budgets, ub, "milp",
+                              n_slots=n_slots, coarse_slots=coarse_slots,
+                              time_limit_s=time_limit_s, mip_gap=mip_gap)
+    return _solve_time_indexed(jobs, choice_map, budgets,
                                ub, "milp", n_slots=n_slots,
                                time_limit_s=time_limit_s, mip_gap=mip_gap)
 
@@ -353,7 +588,9 @@ def solve_joint(jobs: List[Job],
 def solve_joint_classes(jobs: List[Job], profiles, cluster, *,
                         n_slots: int = 20,
                         time_limit_s: float = 30.0,
-                        mip_gap: float = 0.05) -> Solution:
+                        mip_gap: float = 0.05,
+                        refine: bool = False,
+                        coarse_slots: int = 8) -> Solution:
     """Device-class-aware joint MILP for heterogeneous clusters.
 
     A job's config space is the union over device classes of its
@@ -366,25 +603,112 @@ def solve_joint_classes(jobs: List[Job], profiles, cluster, *,
 
     Falls back to a per-class-budget greedy on infeasibility/timeout.
     """
-    classes = list(cluster.device_classes)
-    budgets: Dict[Optional[str], int] = {dc.name: dc.total_gpus
-                                         for dc in classes}
-    choice_map: Dict[str, List[Choice]] = {}
-    for j in jobs:
-        cs: List[Choice] = []
-        for dc in classes:
-            cs.extend(choices_from_profiles(j, profiles,
-                                            device_class=dc.name))
-        cs = [c for c in cs if c.n_gpus <= budgets[c.device_class]]
-        if not cs:
-            raise ValueError(
-                f"job {j.name}: no feasible (technique, g, class)")
-        choice_map[j.name] = cs
+    choice_map, budgets = class_choice_map(jobs, profiles,
+                                           cluster.device_classes)
     ub = greedy_schedule(jobs, choice_map, budgets)
+    if refine:
+        return _solve_refined(jobs, choice_map, budgets, ub,
+                              "milp-classes", n_slots=n_slots,
+                              coarse_slots=coarse_slots,
+                              time_limit_s=time_limit_s, mip_gap=mip_gap)
     return _solve_time_indexed(jobs, choice_map, budgets, ub,
                                "milp-classes", n_slots=n_slots,
                                time_limit_s=time_limit_s, mip_gap=mip_gap)
 
+
+# --------------------------------------------- warm-started incremental
+
+def split_fixed_running(jobs: List[Job], remaining: Dict[str, int],
+                        current: Dict[str, Tuple], running,
+                        choice_map: Dict[str, List[Choice]], profiles,
+                        restart_cost_s: float
+                        ) -> Tuple[List[Assignment], List[Job]]:
+    """Partition live jobs for the incremental replan.
+
+    A job that is RUNNING under assignment ``(tech, g[, class])`` is
+    *fixed* — kept in place, modeled as a capacity reservation — when
+    switching provably cannot pay off on current estimates:
+    ``remaining_runtime(current) <= best_remaining_runtime +
+    restart_cost_s``.  Everything else (waiting, restarting, and running
+    jobs a better config might rescue) lands in the residual the MILP
+    actually re-solves.
+    """
+    from .perfmodel import step_time_of
+    fixed: List[Assignment] = []
+    residual: List[Job] = []
+    for j in jobs:
+        asn = current.get(j.name)
+        if j.name in running and asn:
+            tech, g = asn[0], int(asn[1])
+            dc = asn[2] if len(asn) > 2 else None
+            rem = remaining.get(j.name, j.total_steps)
+            try:
+                st = step_time_of(profiles, j.name, tech, g,
+                                  device_class=dc)
+            except KeyError:
+                st = float("inf")
+            cur_rt = st * rem
+            best_rt = min((c.runtime_s for c in choice_map[j.name]),
+                          default=float("inf"))
+            if math.isfinite(cur_rt) and \
+                    cur_rt <= best_rt + restart_cost_s:
+                fixed.append(Assignment(j.name, tech, g, 0.0, cur_rt,
+                                        device_class=dc))
+                continue
+        residual.append(j)
+    return fixed, residual
+
+
+def solve_residual(residual_jobs: List[Job],
+                   choice_map: Dict[str, List[Choice]],
+                   budgets: Dict[Optional[str], int],
+                   fixed: List[Assignment], *,
+                   n_slots: int = 24,
+                   time_limit_s: float = 10.0,
+                   mip_gap: float = 0.05,
+                   warm_starts: Optional[Dict[str, float]] = None
+                   ) -> Solution:
+    """Warm-started incremental replan: solve only the residual jobs.
+
+    ``fixed`` assignments (running jobs not worth preempting) become
+    per-pool capacity reservations until their estimated ends instead of
+    MILP variables; ``warm_starts`` (job -> previous planned start, in
+    seconds from now) windows each residual job's start variables around
+    the previous solution.  The reservation-aware greedy bound both
+    sizes the horizon and is installed as an upper bound on the makespan
+    variable, so the solve early-exits once within gap of it.
+
+    Returns the merged Solution: fixed assignments (start 0) plus the
+    residual plan.
+    """
+    fixed = list(fixed)
+    if not residual_jobs:
+        mk = max((a.end_s for a in fixed), default=0.0)
+        return Solution(fixed, mk, "fixed")
+    reserved = [(a.device_class, a.n_gpus, a.runtime_s) for a in fixed]
+    ub = greedy_schedule(residual_jobs, choice_map, budgets,
+                         reserved=reserved)
+    horizon = max([ub.makespan_s] + [a.end_s for a in fixed]
+                  + [1e-6]) * 1.05
+    delta = horizon / n_slots
+    # provably safe incumbent bound: any schedule at least as good as
+    # the greedy ub stays slot-representable within one slot per job
+    # in a delay chain (+ one per reservation release it waits on)
+    m_upper = min(horizon, ub.makespan_s
+                  + delta * (len(residual_jobs) + len(fixed)))
+    sol = _solve_time_indexed(
+        residual_jobs, choice_map, budgets, ub, "milp-incremental",
+        n_slots=n_slots, time_limit_s=time_limit_s, mip_gap=mip_gap,
+        horizon=horizon, start_windows=warm_starts,
+        window_pad_s=horizon / 8.0, reserved=reserved, m_upper=m_upper)
+    assignments = fixed + list(sol.assignments)
+    mk = max(a.end_s for a in assignments)
+    name = sol.solver if sol.solver.startswith("milp") \
+        else "greedy-incremental"
+    return Solution(assignments, mk, name, milp_status=sol.milp_status)
+
+
+# ------------------------------------------------------ node-aware MILP
 
 def solve_joint_nodes(jobs: List[Job],
                       profiles: Dict[Tuple[str, str, int], Profile],
@@ -436,106 +760,132 @@ def _solve_nodes_at_horizon(jobs, choice_map, ub, nodes, gpus_per_node, *,
     return best if best is not None else ub
 
 
+# variable kinds in the node MILP's flat arrays
+_X1, _XM, _Y = 0, 1, 2
+
+
 def _solve_nodes_once(jobs, choice_map, nodes, gpus_per_node, *,
                       horizon, n_slots, time_limit_s, mip_gap):
+    """One node-MILP solve at a fixed horizon, vectorized like
+    ``_solve_time_indexed``: variables are x1[j,c,t,nu] (single-node
+    configs pick a node), xm[j,c,t] + y[j,c,t,nu] (whole-node configs
+    pick a node SET), all described by flat attribute arrays, with each
+    constraint family emitted as one bulk COO block."""
     delta = horizon / n_slots
 
-    # variables: x[j,c,t,nu] for single-node; for whole-node configs one
-    # x[j,c,t] plus y[j,c,t,nu] node-occupancy binaries
-    xvars: List[Tuple] = []   # (kind, ji, ci, t, nu_or_None)
-    var_of: Dict[Tuple, int] = {}
-
-    def add(key):
-        var_of[key] = len(xvars)
-        xvars.append(key)
-
-    dur_of: Dict[Tuple[int, int], int] = {}
+    kind_ch, ji_ch, ci_ch, t_ch, nu_ch = [], [], [], [], []
+    dur_ch, g_ch, parent_ch = [], [], []
+    nvar = 0
     for ji, j in enumerate(jobs):
         for ci, c in enumerate(choice_map[j.name]):
             dur = max(1, math.ceil(c.runtime_s / delta - 1e-9))
-            dur_of[(ji, ci)] = dur
             if dur > n_slots:
                 continue
-            for t in range(n_slots - dur + 1):
-                if c.n_gpus <= gpus_per_node:
-                    for nu in range(nodes):
-                        add(("x1", ji, ci, t, nu))
-                else:
-                    add(("xm", ji, ci, t, None))
-                    for nu in range(nodes):
-                        add(("y", ji, ci, t, nu))
-    nx = len(xvars)
+            nst = n_slots - dur + 1
+            if c.n_gpus <= gpus_per_node:
+                n = nst * nodes
+                kind_ch.append(np.full(n, _X1))
+                t_ch.append(np.repeat(np.arange(nst), nodes))
+                nu_ch.append(np.tile(np.arange(nodes), nst))
+                parent_ch.append(np.full(n, -1))
+            else:
+                # per start slot: one xm var then its `nodes` y vars
+                n = nst * (1 + nodes)
+                kinds = np.full(n, _Y)
+                kinds[::1 + nodes] = _XM
+                kind_ch.append(kinds)
+                t_ch.append(np.repeat(np.arange(nst), 1 + nodes))
+                nus = np.tile(np.arange(-1, nodes), nst)
+                nu_ch.append(nus)
+                xm_pos = nvar + np.arange(0, n, 1 + nodes)
+                parents = np.repeat(xm_pos, 1 + nodes)
+                parents[::1 + nodes] = -1     # xm vars have no parent
+                parent_ch.append(parents)
+            ji_ch.append(np.full(n, ji))
+            ci_ch.append(np.full(n, ci))
+            dur_ch.append(np.full(n, dur))
+            g_ch.append(np.full(n, c.n_gpus))
+            nvar += n
+    if not t_ch:
+        return None
+    kind_all = np.concatenate(kind_ch)
+    ji_all = np.concatenate(ji_ch)
+    ci_all = np.concatenate(ci_ch)
+    t_all = np.concatenate(t_ch)
+    nu_all = np.concatenate(nu_ch)
+    dur_all = np.concatenate(dur_ch)
+    g_all = np.concatenate(g_ch)
+    parent_all = np.concatenate(parent_ch)
+    nx = kind_all.size
+    starts = kind_all != _Y                   # x1 and xm: "start" vars
+    n_jobs = len(jobs)
+    if (np.bincount(ji_all[starts], minlength=n_jobs) == 0).any():
+        return None
 
     b = _MilpBuilder(nx)
     # (1) one (choice, start[, node-set]) per job
-    for ji in range(len(jobs)):
-        terms = [(vi, 1.0) for key, vi in var_of.items()
-                 if key[0] in ("x1", "xm") and key[1] == ji]
-        if not terms:
-            return None
-        b.add(terms, 1.0, 1.0)
-    # (2) whole-node jobs: sum_nu y == k * x
-    for key, vi in var_of.items():
-        if key[0] != "xm":
-            continue
-        _, ji, ci, t, _ = key
-        c = choice_map[jobs[ji].name][ci]
-        k = c.n_gpus // gpus_per_node
-        terms = [(vi, -float(k))]
-        for nu in range(nodes):
-            terms.append((var_of[("y", ji, ci, t, nu)], 1.0))
-        b.add(terms, 0.0, 0.0)
-    # (3) per-(node, slot) capacity
-    for nu in range(nodes):
-        for tau in range(n_slots):
-            terms = []
-            for key, vi in var_of.items():
-                kind, ji, ci, t = key[0], key[1], key[2], key[3]
-                if kind == "x1" and key[4] == nu:
-                    c = choice_map[jobs[ji].name][ci]
-                    if t <= tau < t + dur_of[(ji, ci)]:
-                        terms.append((vi, float(c.n_gpus)))
-                elif kind == "y" and key[4] == nu:
-                    if t <= tau < t + dur_of[(ji, ci)]:
-                        terms.append((vi, float(gpus_per_node)))
-            if terms:
-                b.add(terms, -np.inf, float(gpus_per_node))
-    # (4) makespan
-    for key, vi in var_of.items():
-        if key[0] not in ("x1", "xm"):
-            continue
-        _, ji, ci, t = key[0], key[1], key[2], key[3]
-        b.add_makespan(vi, (t + dur_of[(ji, ci)]) * delta)
+    sv = np.flatnonzero(starts)
+    b.add_block(ji_all[sv], sv, np.ones(sv.size),
+                np.ones(n_jobs), np.ones(n_jobs))
+    # (2) whole-node jobs: sum_nu y - k * xm == 0, one row per xm var
+    xm_vars = np.flatnonzero(kind_all == _XM)
+    if xm_vars.size:
+        xm_row = np.full(nx, -1)
+        xm_row[xm_vars] = np.arange(xm_vars.size)
+        y_vars = np.flatnonzero(kind_all == _Y)
+        k_of = g_all[xm_vars] // gpus_per_node
+        b.add_block(
+            np.concatenate([np.arange(xm_vars.size),
+                            xm_row[parent_all[y_vars]]]),
+            np.concatenate([xm_vars, y_vars]),
+            np.concatenate([-k_of.astype(np.float64),
+                            np.ones(y_vars.size)]),
+            np.zeros(xm_vars.size), np.zeros(xm_vars.size))
+    # (3) per-(node, slot) capacity: x1 vars weigh their GPU count, y
+    # vars a whole node; expand each var over its occupied slots
+    occ = np.flatnonzero(kind_all != _XM)
+    reps = dur_all[occ]
+    occ_var = np.repeat(occ, reps)
+    offs = np.repeat(np.cumsum(reps) - reps, reps)
+    taus = np.repeat(t_all[occ], reps) + (np.arange(int(reps.sum())) - offs)
+    weights = np.where(kind_all[occ_var] == _X1,
+                       g_all[occ_var], gpus_per_node).astype(np.float64)
+    b.add_block(nu_all[occ_var] * n_slots + taus, occ_var, weights,
+                np.full(nodes * n_slots, -np.inf),
+                np.full(nodes * n_slots, float(gpus_per_node)))
+    # (4) makespan, aggregated per job over its start vars
+    end_all = (t_all + dur_all) * delta
+    b.add_block(np.concatenate([ji_all[sv], np.arange(n_jobs)]),
+                np.concatenate([sv, np.full(n_jobs, b.M_idx)]),
+                np.concatenate([end_all[sv], -np.ones(n_jobs)]),
+                np.full(n_jobs, -np.inf), np.zeros(n_jobs))
 
     cvec = np.zeros(b.nvar)
     cvec[b.M_idx] = 1.0
-    for key, vi in var_of.items():
-        if key[0] in ("x1", "xm"):
-            cvec[vi] = delta * 1e-4 * key[3]
+    cvec[sv] = (delta * 1e-4) * t_all[sv]
     res = b.solve(cvec, time_limit_s=time_limit_s, mip_gap=mip_gap)
     if res is None:
         return None
-    x = res.x
+    xb = res.x[:nx]
+    pick: Dict[int, int] = {}
+    for vi in np.flatnonzero((xb > 0.5) & starts):
+        ji = int(ji_all[vi])
+        if ji not in pick or xb[vi] > xb[pick[ji]]:
+            pick[ji] = int(vi)
+    if len(pick) != n_jobs:
+        return None
     assignments = []
     for ji, j in enumerate(jobs):
-        pick = None
-        for key, vi in var_of.items():
-            if key[0] in ("x1", "xm") and key[1] == ji and x[vi] > 0.5:
-                pick = key
-                break
-        if pick is None:
-            return None
-        kind, _, ci, t, nu = pick
-        c = choice_map[j.name][ci]
-        if kind == "x1":
-            node_set: Tuple[int, ...] = (nu,)
+        vi = pick[ji]
+        c = choice_map[j.name][int(ci_all[vi])]
+        if kind_all[vi] == _X1:
+            node_set: Tuple[int, ...] = (int(nu_all[vi]),)
         else:
-            node_set = tuple(sorted(
-                n2 for n2 in range(nodes)
-                if x[var_of[("y", ji, ci, t, n2)]] > 0.5))
+            ys = np.flatnonzero((parent_all == vi) & (xb > 0.5))
+            node_set = tuple(sorted(int(nu_all[y]) for y in ys))
         assignments.append(Assignment(j.name, c.technique, c.n_gpus,
-                                      t * delta, c.runtime_s,
-                                      nodes=node_set))
+                                      float(t_all[vi]) * delta,
+                                      c.runtime_s, nodes=node_set))
     makespan = max(a.end_s for a in assignments)
     return Solution(assignments, makespan, "milp-nodes",
                     milp_status=res.message)

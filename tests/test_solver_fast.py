@@ -1,0 +1,316 @@
+"""Fast scheduling core: vectorized assembly parity, coarse-to-fine
+refinement, warm-started incremental replans, the choice cache, and the
+runtime plumbing that feeds them.
+
+Exact-equivalence tests use Optimus/CurrentPractice per repo
+convention — MILP policies are time-limit-nondeterministic.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.baselines import (CurrentPractice, OptimusDynamic,
+                                  SaturnPolicy)
+from repro.core.executor import simulate, simulate_legacy
+from repro.core.job import ClusterSpec, Job
+from repro.core.profiler import Profile
+from repro.core.solver import (Assignment, choices_from_profiles,
+                               clear_choice_cache, greedy_schedule,
+                               solve_joint, solve_residual,
+                               split_fixed_running)
+
+CFG = get_config("xlstm-125m").reduced()
+CLUSTER = ClusterSpec(nodes=1, gpus_per_node=8, restart_cost_s=10.0)
+
+
+def mk_job(name, steps=100):
+    return Job(name, CFG, batch_size=8, seq_len=64, total_steps=steps)
+
+
+def mk_profiles(step_times):
+    return {(jn, tech, g): Profile(jn, tech, g, t, 1e9, True, "test")
+            for (jn, tech, g), t in step_times.items()}
+
+
+def random_workload(n_jobs, total_gpus, seed):
+    rng = np.random.RandomState(seed)
+    jobs, times = [], {}
+    for i in range(n_jobs):
+        j = mk_job(f"r{i}", steps=int(rng.randint(50, 500)))
+        jobs.append(j)
+        base = rng.uniform(0.5, 5.0)
+        eff = rng.uniform(0.4, 1.0)
+        g = 1
+        while g <= total_gpus:
+            times[(j.name, "fsdp", g)] = base / g ** eff
+            g *= 2
+    return jobs, mk_profiles(times)
+
+
+def validate_capacity(assignments, budget):
+    events = sorted({a.start_s for a in assignments}
+                    | {a.end_s for a in assignments})
+    for t in events:
+        used = sum(a.n_gpus for a in assignments
+                   if a.start_s <= t < a.end_s - 1e-9)
+        assert used <= budget + 1e-9, f"capacity violated at t={t}"
+
+
+# ------------------------------------------------- coarse-to-fine refine
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_refined_small_instances_match_dense(seed):
+    """Below the refinement threshold refine=True takes the dense path:
+    identical quality, nothing to trade."""
+    jobs, profiles = random_workload(6, 16, seed)
+    dense = solve_joint(jobs, profiles, 16, n_slots=24, time_limit_s=10,
+                        mip_gap=0.02)
+    fine = solve_joint(jobs, profiles, 16, n_slots=24, time_limit_s=10,
+                       mip_gap=0.02, refine=True)
+    assert {a.job for a in fine.assignments} == {j.name for j in jobs}
+    validate_capacity(fine.assignments, 16)
+    assert fine.makespan_s <= dense.makespan_s * 1.01 + 1e-6
+
+
+@pytest.mark.parametrize("seed", [2, 7])
+def test_refined_within_gap_of_dense(seed):
+    """Above the threshold the coarse-to-fine windows engage; quality
+    must stay near the dense solve (a heuristic, hence the slack)."""
+    jobs, profiles = random_workload(12, 16, seed)
+    dense = solve_joint(jobs, profiles, 16, n_slots=24, time_limit_s=15,
+                        mip_gap=0.02)
+    fine = solve_joint(jobs, profiles, 16, n_slots=24, time_limit_s=15,
+                       mip_gap=0.02, refine=True)
+    assert {a.job for a in fine.assignments} == {j.name for j in jobs}
+    validate_capacity(fine.assignments, 16)
+    assert fine.makespan_s <= dense.makespan_s * 1.10 + 1e-6
+
+
+def test_refine_noop_on_coarse_grids():
+    jobs, profiles = random_workload(4, 8, 2)
+    a = solve_joint(jobs, profiles, 8, n_slots=8, time_limit_s=5)
+    b = solve_joint(jobs, profiles, 8, n_slots=8, time_limit_s=5,
+                    refine=True, coarse_slots=8)
+    assert b.makespan_s == pytest.approx(a.makespan_s, rel=1e-9)
+
+
+# ------------------------------------------------------- greedy reserved
+
+def test_greedy_reserved_delays_start():
+    j = mk_job("a", steps=100)
+    choices = {"a": choices_from_profiles(
+        j, mk_profiles({("a", "ddp", 8): 1.0}))}
+    free = greedy_schedule([j], choices, 8)
+    assert free.assignments[0].start_s == 0.0
+    held = greedy_schedule([j], choices, 8,
+                           reserved=[(None, 8, 50.0)])
+    assert held.assignments[0].start_s == pytest.approx(50.0)
+    partial = greedy_schedule([j], choices, 16,
+                              reserved=[(None, 8, 50.0)])
+    assert partial.assignments[0].start_s == 0.0
+
+
+# ----------------------------------------------------------- choice cache
+
+def test_choice_cache_consistent_and_invalidated():
+    clear_choice_cache()
+    j1, j2 = mk_job("x", steps=100), mk_job("x", steps=200)
+    profiles = mk_profiles({("x", "ddp", 1): 10.0, ("x", "fsdp", 2): 6.0})
+    first = choices_from_profiles(j1, profiles)
+    again = choices_from_profiles(j1, profiles)
+    assert [(c.technique, c.n_gpus, c.runtime_s) for c in first] == \
+        [(c.technique, c.n_gpus, c.runtime_s) for c in again]
+    # runtimes scale with the job's remaining steps, off the same cache
+    doubled = choices_from_profiles(j2, profiles)
+    by_key = {(c.technique, c.n_gpus): c.runtime_s for c in first}
+    for c in doubled:
+        assert c.runtime_s == pytest.approx(
+            2.0 * by_key[(c.technique, c.n_gpus)])
+    # mutating the dict (new key) invalidates the cached enumeration
+    profiles[("x", "tp", 4)] = Profile("x", "tp", 4, 1.0, 1e9, True, "t")
+    fresh = choices_from_profiles(j1, profiles)
+    assert ("tp", 4) in {(c.technique, c.n_gpus) for c in fresh}
+
+
+# --------------------------------------------- warm incremental residual
+
+def test_solve_residual_respects_reservations():
+    """A fixed 6-GPU job holds the pool until t=50; the residual job
+    needs 4 GPUs and must wait for the release."""
+    j = mk_job("res", steps=100)
+    choices = {"res": choices_from_profiles(
+        j, mk_profiles({("res", "ddp", 4): 1.0}))}
+    fixed = [Assignment("fix", "fsdp", 6, 0.0, 50.0)]
+    sol = solve_residual([j], choices, {None: 8}, fixed,
+                         n_slots=20, time_limit_s=5)
+    by_job = {a.job: a for a in sol.assignments}
+    assert set(by_job) == {"fix", "res"}
+    assert by_job["res"].start_s >= 50.0 - 1e-6
+    assert sol.makespan_s == pytest.approx(by_job["res"].end_s)
+
+
+def test_solve_residual_no_residual_keeps_fixed():
+    fixed = [Assignment("a", "ddp", 4, 0.0, 30.0),
+             Assignment("b", "fsdp", 4, 0.0, 80.0)]
+    sol = solve_residual([], {}, {None: 8}, fixed)
+    assert sol.solver == "fixed"
+    assert sol.makespan_s == pytest.approx(80.0)
+    assert len(sol.assignments) == 2
+
+
+def test_split_fixed_running_criterion():
+    """Fix a running job iff switching provably cannot pay off:
+    remaining(current) <= best remaining + restart cost."""
+    a, b = mk_job("a", steps=100), mk_job("b", steps=100)
+    profiles = mk_profiles({("a", "ddp", 1): 1.0, ("a", "ddp", 2): 0.5,
+                            ("b", "ddp", 1): 1.0, ("b", "ddp", 2): 0.99})
+    cm = {j.name: choices_from_profiles(j, profiles) for j in (a, b)}
+    remaining = {"a": 100, "b": 100}
+    current = {"a": ("ddp", 1), "b": ("ddp", 1)}
+    fixed, residual = split_fixed_running(
+        [a, b], remaining, current, {"a", "b"}, cm, profiles,
+        restart_cost_s=10.0)
+    # a: current 100s vs best 50s + 10s restart -> worth preempting
+    # b: current 100s vs best 99s + 10s restart -> fixed in place
+    assert [f.job for f in fixed] == ["b"]
+    assert [j.name for j in residual] == ["a"]
+    assert fixed[0].runtime_s == pytest.approx(100.0)
+
+
+def test_incremental_close_to_scratch_when_fixing_is_right():
+    """Running jobs already on their best configs (and a physically
+    consistent running state — their GPUs fit together): the
+    incremental replan (fix + residual) must match a from-scratch
+    re-solve."""
+    rng = np.random.RandomState(7)
+    jobs, times = [], {}
+    for i in range(5):
+        j = mk_job(f"r{i}", steps=int(rng.randint(50, 300)))
+        jobs.append(j)
+        base = rng.uniform(0.5, 5.0)
+        # scaling saturates at 4 GPUs (8 is strictly worse, so it gets
+        # pruned): g=4 is every job's best choice, and two running jobs
+        # fit the 8-GPU pool together
+        for g, speed in ((1, 1.0), (2, 1.9), (4, 3.6), (8, 3.5)):
+            times[(j.name, "fsdp", g)] = base / speed
+    profiles = mk_profiles(times)
+    cm = {j.name: choices_from_profiles(j, profiles) for j in jobs}
+    running = {jobs[0].name, jobs[1].name}
+    current, remaining = {}, {}
+    for j in jobs:
+        remaining[j.name] = j.total_steps
+        if j.name in running:
+            best = min(cm[j.name], key=lambda c: c.runtime_s)
+            current[j.name] = (best.technique, best.n_gpus)
+            assert best.n_gpus == 4
+    fixed, residual = split_fixed_running(
+        jobs, remaining, current, running, cm, profiles,
+        restart_cost_s=10.0)
+    assert {f.job for f in fixed} == running
+    scratch = solve_joint(jobs, profiles, 8, n_slots=20, time_limit_s=10,
+                          mip_gap=0.02)
+    incr = solve_residual(residual,
+                          {j.name: cm[j.name] for j in residual},
+                          {None: 8}, fixed, n_slots=20, time_limit_s=10,
+                          mip_gap=0.02)
+    assert {a.job for a in incr.assignments} == {j.name for j in jobs}
+    validate_capacity(incr.assignments, 8)
+    assert incr.makespan_s <= scratch.makespan_s * 1.10 + 1e-6
+
+
+# ------------------------------------------------------- runtime plumbing
+
+def test_runtime_incremental_saturn_completes_and_conserves():
+    """SaturnPolicy with warm-started replans drives the runtime end to
+    end: every job finishes and (simulate's built-in) per-class
+    GPU-second conservation holds under heavy introspection."""
+    jobs, profiles = random_workload(6, 8, seed=5)
+    res = simulate(jobs, SaturnPolicy(time_limit_s=5, incremental=True),
+                   profiles, CLUSTER, introspect_every_s=100,
+                   noise_sigma=0.3)
+    assert {g.job for g in res.gantt if g.kind == "run"} == \
+        {j.name for j in jobs}
+    assert res.replans > 1
+
+
+def test_incremental_vs_scratch_policy_same_workload():
+    """Warm-started and from-scratch Saturn replans both finish the
+    workload; the incremental path must not collapse in quality."""
+    jobs, profiles = random_workload(6, 8, seed=9)
+    warm = simulate(jobs, SaturnPolicy(time_limit_s=5, incremental=True),
+                    profiles, CLUSTER, introspect_every_s=150,
+                    noise_sigma=0.2)
+    cold = simulate(jobs, SaturnPolicy(time_limit_s=5, incremental=False),
+                    profiles, CLUSTER, introspect_every_s=150,
+                    noise_sigma=0.2)
+    assert warm.makespan_s <= cold.makespan_s * 1.25 + 1e-6
+
+
+def _equiv_workload():
+    rng = np.random.RandomState(17)
+    jobs, times = [], {}
+    for i in range(7):
+        j = mk_job(f"j{i}", steps=int(rng.randint(100, 400)))
+        jobs.append(j)
+        base, eff = rng.uniform(1, 4), rng.uniform(0.5, 0.95)
+        for g in (1, 2, 4, 8):
+            for tech, mult in (("ddp", 1.0), ("fsdp", 1.1)):
+                times[(j.name, tech, g)] = base * mult / g ** eff
+    return jobs, mk_profiles(times)
+
+
+def _segments(res):
+    return sorted((g.job, g.technique, g.n_gpus,
+                   round(g.start_s, 9), round(g.end_s, 9))
+                  for g in res.gantt if g.kind == "run")
+
+
+def test_warm_replan_plumbing_keeps_gantt_accounting_static():
+    """The plan_incremental plumbing must be invisible to policies that
+    do not opt in: for a static policy the runtime's Gantt must match
+    the legacy loop's SEGMENT FOR SEGMENT, not just on makespan."""
+    jobs, profiles = _equiv_workload()
+    new = simulate(jobs, CurrentPractice(), profiles, CLUSTER,
+                   noise_sigma=0.35)
+    old = simulate_legacy(jobs, CurrentPractice(), profiles, CLUSTER,
+                          noise_sigma=0.35)
+    assert _segments(new) == _segments(old)
+    assert new.restarts == old.restarts == 0
+
+
+def test_warm_replan_plumbing_keeps_gantt_accounting_dynamic():
+    """Dynamic non-incremental policies keep the established
+    runtime/legacy equivalence contract through the new replan path:
+    exact makespan, restart count and run-segment count.  (Segment
+    shapes may differ: legacy replans at completions also when only a
+    RESTARTING job is pending — a pre-existing nuance, not part of the
+    contract.)"""
+    jobs, profiles = _equiv_workload()
+    new = simulate(jobs, OptimusDynamic(), profiles, CLUSTER,
+                   introspect_every_s=120.0, noise_sigma=0.35)
+    old = simulate_legacy(jobs, OptimusDynamic(), profiles, CLUSTER,
+                          introspect_every_s=120.0, noise_sigma=0.35)
+    assert new.makespan_s == pytest.approx(old.makespan_s, rel=1e-12)
+    assert new.restarts == old.restarts > 0
+    assert len(_segments(new)) == len(_segments(old))
+
+
+def test_session_solver_knobs():
+    from repro.core.api import SaturnSession
+    sess = SaturnSession(ClusterSpec(nodes=1, gpus_per_node=4))
+    jobs = [mk_job("s0", steps=40), mk_job("s1", steps=60)]
+    sess.submit(jobs)
+    res = sess.run(n_slots=10, time_limit_s=2, mip_gap=0.1, refine=True,
+                   introspect_every_s=None)
+    assert {g.job for g in res.gantt if g.kind == "run"} == {"s0", "s1"}
+    with pytest.raises(ValueError):
+        sess.run(policy=CurrentPractice(), n_slots=10)
+
+
+def test_saturn_refine_policy_runs():
+    jobs, profiles = random_workload(5, 8, seed=13)
+    res = simulate(jobs, SaturnPolicy(time_limit_s=5, refine=True),
+                   profiles, CLUSTER, introspect_every_s=200,
+                   noise_sigma=0.1)
+    assert {g.job for g in res.gantt if g.kind == "run"} == \
+        {j.name for j in jobs}
