@@ -10,7 +10,10 @@ BENCH_schedule.json at the repo root; ``profile`` benchmarks the
 performance-model layer (anchor trials + interpolation vs exhaustive
 profiling) and writes BENCH_profile.json; ``hetero`` compares
 class-aware vs class-blind planning on a mixed A100+V100 fleet and
-writes BENCH_hetero.json; ``--quick`` is the CI smoke variant.  Prints ``name,us_per_call,derived`` CSV rows (harness
+writes BENCH_hetero.json; ``e2e`` executes one Schedule IR on BOTH the
+virtual-time SimBackend and the really-training LocalJaxBackend and
+writes BENCH_e2e.json (sim-vs-real makespan fidelity + a real
+checkpointed preempt/resume); ``--quick`` is the CI smoke variant.  Prints ``name,us_per_call,derived`` CSV rows (harness
 contract) followed by human-readable tables.  Results also land in
 results/*.json.
 """
@@ -392,6 +395,198 @@ def bench_hetero(quick=False):
         f"class-aware ({aware.makespan_s:.0f}s) did not beat " \
         f"class-blind ({blind.makespan_s:.0f}s)"
     path = os.path.join(ROOT, "BENCH_hetero.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\nwrote {path}")
+    return out
+
+
+# ------------------------------------------------------- end-to-end (e2e)
+
+def bench_e2e(quick=False):
+    """Unified-backend benchmark: the SAME Schedule IR executed by the
+    virtual-time SimBackend (prediction) and by the LocalJaxBackend
+    (really training the reduced models on this machine), gating how
+    faithful the simulated makespan is to actually-executed wall clock
+    — plus a forced mid-run introspection replan that preempts a
+    really-training job, checkpoints it, and resumes it from the saved
+    step.  Writes BENCH_e2e.json (repo root).
+
+    Run standalone (``benchmarks/run.py e2e``) this forces 4 host
+    devices via XLA_FLAGS so jobs train concurrently on disjoint
+    slices; under ``all`` (jax already initialized) it falls back to
+    whatever devices exist.
+    """
+    import sys as _sys
+    if "jax" not in _sys.modules:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=4")
+    import dataclasses
+    import math
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.core.baselines import SaturnStatic
+    from repro.core.executor import simulate
+    from repro.core.job import ClusterSpec, Job
+    from repro.core.library import ParallelismLibrary
+    from repro.core.local_backend import LocalJaxBackend
+    from repro.core.profiler import HARDWARE, Profile, TrialRunner
+    from repro.core.schedule import Policy, Schedule, ScheduleEntry
+    from repro.parallelism.techniques import DDP, RematOffload
+
+    t_bench = time.time()
+    n_dev = min(4, len(jax.devices()))
+    cluster = ClusterSpec(nodes=1, gpus_per_node=n_dev, restart_cost_s=1.0)
+    counts = [1, 2] if n_dev >= 2 else [1]
+    cfg = dataclasses.replace(
+        get_config("xlstm-125m").reduced(), d_model=64, num_heads=2,
+        num_kv_heads=2, head_dim=32, name="xlstm-micro")
+    lib = ParallelismLibrary([DDP(), RematOffload()])
+
+    # ---- empirical Trial Runner: REAL minibatch timings on this
+    # machine; one probe job profiles the shared (cfg, batch, seq)
+    # shape, replicated per job name for the solver
+    probe = Job("probe", cfg, 2, 32, total_steps=1)
+    runner = TrialRunner(lib, HARDWARE["a100"])
+    t0 = time.time()
+    probes = {g: runner.profile(probe, "ddp", g, mode="empirical")
+              for g in counts}
+    if n_dev < 2:     # single device: restarts flip technique instead
+        probes_rm = runner.profile(probe, "remat-offload", 1,
+                                   mode="empirical")
+    wall_profile = time.time() - t0
+    est1 = probes[1].step_time_s
+    emit("e2e_profile", wall_profile * 1e6,
+         f"ddp1={est1 * 1e3:.1f}ms trials={runner.trials}")
+
+    def mk_profiles(jobs):
+        out = {}
+        for j in jobs:
+            for g, p in probes.items():
+                out[(j.name, "ddp", g)] = Profile(
+                    j.name, "ddp", g, p.step_time_s, p.mem_per_device,
+                    p.feasible, p.source)
+            if n_dev < 2:
+                out[(j.name, "remat-offload", 1)] = Profile(
+                    j.name, "remat-offload", 1, probes_rm.step_time_s,
+                    probes_rm.mem_per_device, probes_rm.feasible,
+                    probes_rm.source)
+        return out
+
+    scale = 1.0 if quick else 2.5
+    # size workloads from the MEASURED rate so the training phase
+    # dominates JIT compiles comparably on fast and slow machines
+    def steps_for(seconds, lo):
+        return max(lo, int(scale * seconds / max(est1, 1e-4)))
+
+    # ---- scenario 1: fidelity.  One static plan, two backends.
+    jobs = [Job(f"j{i}", cfg, 2, 32,
+                total_steps=steps_for(s, 300), lr=lr, seed=i)
+            for i, (s, lr) in enumerate([(16.0, 1e-3), (10.0, 3e-4),
+                                         (10.0, 1e-3)])]
+    profiles = mk_profiles(jobs)
+    predicted = simulate(jobs, SaturnStatic(time_limit_s=10), profiles,
+                         cluster, noise_sigma=0.0)
+    be1 = LocalJaxBackend(library=lib)
+    t0 = time.time()
+    executed = simulate(jobs, SaturnStatic(time_limit_s=10), profiles,
+                        cluster, noise_sigma=0.0, exec_backend=be1)
+    wall_exec = time.time() - t0
+    ratio = executed.makespan_s / predicted.makespan_s
+    compile_total = sum(s["compile_s"] for st in executed.stats.values()
+                        for s in st["segments"])
+    emit("e2e_fidelity", wall_exec * 1e6,
+         f"predicted={predicted.makespan_s:.1f}s "
+         f"executed={executed.makespan_s:.1f}s ratio={ratio:.2f} "
+         f"compile_total={compile_total:.1f}s")
+    for j in jobs:
+        segs = executed.stats[j.name]["segments"]
+        assert sum(s["steps"] for s in segs) == j.total_steps, j.name
+    # wide fidelity band: real compiles + CPU contention sit on top of
+    # the per-step estimates; an order-of-magnitude miss means the sim
+    # and the execution no longer describe the same system
+    assert 0.1 <= ratio <= 8.0, f"fidelity ratio {ratio:.2f} out of band"
+
+    # ---- scenario 2: a mid-run introspection replan preempts a
+    # REALLY-training job; it checkpoints, pays the restart penalty,
+    # and resumes from the saved step with the data stream continued
+    class FlipWhenProgressed(Policy):
+        name = "flip"
+        dynamic = True
+        replan_on_completion = False
+
+        def __init__(self, target, total):
+            self.target, self.total = target, total
+            self.flipped = False
+
+        def entry(self, name):
+            if name == self.target and self.flipped:
+                return ("ddp", 2) if n_dev >= 2 else ("remat-offload", 1)
+            return ("ddp", 1)
+
+        def plan(self, jobs_, remaining, _profiles, _cluster, current):
+            if remaining.get(self.target, self.total) < self.total:
+                self.flipped = True
+            return Schedule([ScheduleEntry(j.name, *self.entry(j.name))
+                             for j in jobs_])
+
+    long_steps = steps_for(14.0, 800)
+    jobs2 = [Job("j0", cfg, 2, 32, total_steps=long_steps, lr=1e-3,
+                 seed=0)] + \
+            [Job(f"j{i}", cfg, 2, 32, total_steps=steps_for(3.0, 150),
+                 lr=1e-3, seed=i) for i in (1, 2)]
+    profiles2 = mk_profiles(jobs2)
+    be2 = LocalJaxBackend(library=lib)
+    t0 = time.time()
+    res2 = simulate(jobs2, FlipWhenProgressed("j0", long_steps),
+                    profiles2, cluster, noise_sigma=0.0,
+                    introspect_every_s=2.5, exec_backend=be2)
+    wall_restart = time.time() - t0
+    segs = res2.stats["j0"]["segments"]
+    for a, b in zip(segs, segs[1:]):
+        assert b["start_step"] == a["start_step"] + a["steps"], \
+            "resume did not continue from the checkpointed step"
+    assert res2.restarts >= 1, "no mid-run restart was exercised"
+    assert segs[0]["steps"] > 0 and len(segs) >= 2
+    assert sum(s["steps"] for s in segs) == long_steps
+    losses = res2.stats["j0"]["losses"]
+    assert all(math.isfinite(v) for _, v in losses)
+    resumed_step = segs[1]["start_step"]
+    loss_gap = abs(segs[1]["first_loss"] - segs[0]["last_loss"]) \
+        if segs[0]["last_loss"] is not None else None
+    emit("e2e_restart", wall_restart * 1e6,
+         f"restarts={res2.restarts} resumed_step={resumed_step} "
+         f"segments={len(segs)} loss_gap={loss_gap:.3f} "
+         f"observed={len(be2.observed)}")
+    assert be2.observed, \
+        "measured step times must feed the introspection replans"
+
+    out = {
+        "quick": quick,
+        "devices": n_dev,
+        "jobs": len(jobs),
+        "est_step_ddp1_s": est1,
+        "profiling_wall_s": wall_profile,
+        "predicted_makespan_s": predicted.makespan_s,
+        "executed_makespan_s": executed.makespan_s,
+        "makespan_executed_over_predicted": ratio,
+        "compile_total_s": compile_total,
+        "restart_scenario": {
+            "long_steps": long_steps,
+            "restarts": res2.restarts,
+            "replans": res2.replans,
+            "resumed_step": resumed_step,
+            "segments_j0": len(segs),
+            "loss_gap_at_resume": loss_gap,
+            "observed_combos": len(be2.observed),
+            "executed_makespan_s": res2.makespan_s,
+        },
+        "bench_wall_s": time.time() - t_bench,
+    }
+    path = os.path.join(ROOT, "BENCH_e2e.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=1)
     print(f"\nwrote {path}")
@@ -893,7 +1088,7 @@ def main() -> None:
     ap.add_argument("which", nargs="?", default="all",
                     choices=["all", "roofline", "kernels", "solver",
                              "introspection", "table2", "schedule",
-                             "profile", "hetero"])
+                             "profile", "hetero", "e2e"])
     ap.add_argument("--quick", action="store_true",
                     help="reduced workloads (CI smoke job)")
     args = ap.parse_args()
@@ -911,6 +1106,8 @@ def main() -> None:
         bench_profile(quick=args.quick)
     if which in ("hetero", "all"):
         bench_hetero(quick=args.quick)
+    if which in ("e2e", "all"):
+        bench_e2e(quick=args.quick)
     if which in ("introspection", "all"):
         bench_introspection()
     if which in ("table2", "all"):

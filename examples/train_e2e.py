@@ -1,28 +1,28 @@
-"""End-to-end driver: REALLY train a ~100M-param xLSTM on CPU for a few
-hundred steps through the full Saturn pipeline — empirical Trial-Runner
-profiling, MILP plan, LocalRunner execution with checkpoint/resume (the
-introspection relaunch path).
+"""End-to-end driver: REALLY train xLSTM variants on this machine
+through the full session-driven Saturn pipeline — empirical
+Trial-Runner profiling, MILP plan, and the cluster runtime executing
+the Schedule IR on the LocalJaxBackend: concurrent per-job device
+slices, wall-clock introspection replans with measured-throughput
+feedback, and checkpointed preemption/resume.
+
+NOTE: execution goes through ``SaturnSession.run(backend="local")`` —
+the same Schedule IR and event engine as the simulator, with the
+execution substrate swapped (see README "Execution backends").  The old
+hand-rolled LocalRunner loop this example used to carry lives on as the
+serial building block in ``repro.core.executor.LocalRunner``.
 
     PYTHONPATH=src python examples/train_e2e.py --steps 300 --size small
 
 --size full uses the real xlstm-125m config (slower on CPU);
---size small uses a ~30M same-family variant for quick runs.
+--size small uses a ~12M same-family variant for quick runs.
+--gpus N maps N "cluster GPUs" onto N forced host CPU devices so jobs
+really train concurrently.
 """
 import argparse
 import dataclasses
 import os
 import sys
 import time
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-
-from repro.configs import get_config
-from repro.core.executor import LocalRunner
-from repro.core.job import Job
-from repro.core.library import ParallelismLibrary
-from repro.core.profiler import HARDWARE, TrialRunner
-from repro.core.solver import solve_joint
 
 
 def main():
@@ -31,8 +31,22 @@ def main():
     ap.add_argument("--size", default="small", choices=["small", "full"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--gpus", type=int, default=2,
+                    help="cluster size; maps onto forced host devices")
+    ap.add_argument("--introspect-s", type=float, default=60.0)
     ap.add_argument("--ckpt-dir", default="/tmp/saturn_e2e")
     args = ap.parse_args()
+
+    # expose N host devices BEFORE jax initializes, so the runtime can
+    # place concurrent jobs on disjoint device slices
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count"
+                                 f"={args.gpus}")
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+    from repro.configs import get_config
+    from repro.core.api import SaturnSession
+    from repro.core.job import ClusterSpec, Job
 
     base = get_config("xlstm-125m")
     if args.size == "small":
@@ -48,34 +62,36 @@ def main():
                 total_steps=args.steps, lr=lr, seed=i)
             for i, (lr) in enumerate([3e-4, 1e-3])]
 
-    lib = ParallelismLibrary()
-    runner = TrialRunner(lib, HARDWARE["a100"])
-    print("== Trial Runner (empirical, 2 minibatches each) ==")
-    profiles = {}
-    for j in jobs:
-        p = runner.profile(j, "ddp", 1, mode="empirical")
-        profiles[(j.name, "ddp", 1)] = p
-        print(f"  {j.name}: {p.step_time_s * 1e3:.0f} ms/step")
+    cluster = ClusterSpec(nodes=1, gpus_per_node=args.gpus,
+                          restart_cost_s=2.0)
+    sess = SaturnSession(cluster)
+    sess.submit(jobs)
 
-    sol = solve_joint(jobs, profiles, total_gpus=1, n_slots=8)
-    print(f"== Solver ({sol.solver}) ==  plan:")
-    for a in sol.order():
-        print(f"  t={a.start_s:.0f}s {a.job} ({a.technique} x{a.n_gpus})")
+    print("== Trial Runner (empirical, real minibatches) ==")
+    t0 = time.time()
+    profiles = sess.profile(mode="empirical", strategy="exhaustive")
+    for (name, tech, g), p in sorted(profiles.items()):
+        if p.feasible:
+            print(f"  {name} {tech} x{g}: {p.step_time_s * 1e3:.0f} ms/step")
+    print(f"  ({time.time() - t0:.0f}s)")
 
-    local = LocalRunner(ckpt_dir=args.ckpt_dir)
-    print("== Executing (LocalRunner, real training, checkpointed) ==")
-    for a in sol.order():
-        job = next(j for j in jobs if j.name == a.job)
-        tech = lib.get(a.technique)
-        # run in two halves with a checkpoint/relaunch between — the
-        # introspection mechanism's restart path, exercised for real
-        t0 = time.time()
-        r1 = local.run_job(job, tech, a.n_gpus, steps=job.total_steps // 2)
-        r2 = local.run_job(job, tech, a.n_gpus)  # resumes from checkpoint
-        print(f"  {job.name}: loss {r1['loss']:.3f} -> {r2['loss']:.3f} "
-              f"({job.total_steps} steps, {time.time() - t0:.0f}s, "
-              f"resumed at step {job.total_steps // 2})")
-        assert r2["done"]
+    print("== Solver + LocalJaxBackend (real training, checkpointed) ==")
+    t0 = time.time()
+    res = sess.run(backend="local", ckpt_dir=args.ckpt_dir,
+                   introspect_every_s=args.introspect_s, time_limit_s=10)
+    print(f"  makespan {res.makespan_s:.0f}s (wall {time.time() - t0:.0f}s) "
+          f"replans={res.replans} restarts={res.restarts}")
+    by_name = {j.name: j for j in jobs}
+    for name, st in sorted(res.stats.items()):
+        segs = st["segments"]
+        total = sum(s["steps"] for s in segs)
+        first = st["losses"][0][1] if st["losses"] else float("nan")
+        last = st["losses"][-1][1] if st["losses"] else float("nan")
+        print(f"  {name}: {total} steps in {len(segs)} segment(s), "
+              f"loss {first:.3f} -> {last:.3f}, "
+              + ", ".join(f"{s['technique']}x{s['n_gpus']}"
+                          f"@{s['start_step']}" for s in segs))
+        assert total >= by_name[name].total_steps
 
 
 if __name__ == "__main__":

@@ -67,3 +67,20 @@ def load_metadata(path: str) -> Optional[dict]:
         with open(meta) as f:
             return json.load(f)
     return None
+
+
+def load_training_state(path: str, params: Any, opt: Any):
+    """Resume helper: restore ``(params, opt, start_step)`` from
+    ``path`` if a checkpoint exists there (the step count comes from
+    the metadata sidecar), else return the inputs unchanged at step 0.
+
+    This is the single source of truth for the resume contract shared
+    by ``LocalRunner.run_job`` and the LocalJaxBackend workers — the
+    caller seeds fresh state, then continues from wherever the last
+    run (or a preemption) checkpointed.
+    """
+    if not os.path.exists(path):
+        return params, opt, 0
+    meta = load_metadata(path) or {}
+    state = load_checkpoint(path, {"params": params, "opt": opt})
+    return state["params"], state["opt"], int(meta.get("step", 0))

@@ -3,22 +3,29 @@ Solver -> event-driven cluster runtime.
 
 Layering (each layer only imports downward):
 
-    schedule.py   Schedule IR: Placement / ScheduleEntry / Schedule, the
-                  Policy interface all planners implement
-    events.py     event types + queue (arrival, completion, restart, tick)
-    placement.py  pluggable device assignment: FlatPool | NodeAware
-    runtime.py    ClusterState + the discrete-event execution engine
-    perfmodel.py  throughput curves over GPU count: anchor trials +
-                  interpolation (PerfModel, the profiles contract)
-    solver.py     the joint MILPs (flat + node-locality), greedy fallback
-    baselines.py  paper baselines + the Saturn policy (emit Schedule IR)
-    executor.py   simulate() compatibility wrapper + legacy comparator,
-                  LocalRunner for real local execution
-    api.py        SaturnSession facade
+    schedule.py      Schedule IR: Placement / ScheduleEntry / Schedule, the
+                     Policy interface all planners implement
+    events.py        event types + queue (arrival, completion, restart, tick)
+    placement.py     pluggable device assignment: FlatPool | NodeAware
+    runtime.py       ClusterState + the backend-agnostic discrete-event
+                     engine; the ExecutionBackend protocol + SimBackend
+    local_backend.py LocalJaxBackend: the same Schedule IR really trains
+                     on this machine's JAX devices (checkpointed
+                     preemption, measured-throughput feedback)
+    perfmodel.py     throughput curves over GPU count: anchor trials +
+                     interpolation (PerfModel, the profiles contract);
+                     ObservedProfiles measured-feedback overlay
+    solver.py        the joint MILPs (flat + node-locality), greedy fallback
+    baselines.py     paper baselines + the Saturn policy (emit Schedule IR)
+    executor.py      simulate() compatibility wrapper + legacy comparator,
+                     LocalRunner serial building block
+    api.py           SaturnSession facade (run(backend="sim"|"local"))
 """
 from .api import SaturnSession                              # noqa: F401
 from .job import ClusterSpec, DeviceClass, Job, hpo_grid    # noqa: F401
-from .perfmodel import PerfModel, ThroughputCurve, select_anchor_counts  # noqa: F401
+from .perfmodel import (ObservedProfiles, PerfModel,        # noqa: F401
+                        ThroughputCurve, select_anchor_counts)
 from .placement import ClassPool, FlatPool, NodeAware, make_backend  # noqa: F401
-from .runtime import SimResult, simulate_runtime            # noqa: F401
+from .runtime import (ExecutionBackend, SimBackend,         # noqa: F401
+                      SimResult, execute_runtime, simulate_runtime)
 from .schedule import Placement, Policy, Schedule, ScheduleEntry  # noqa: F401

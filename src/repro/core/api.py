@@ -29,9 +29,10 @@ from .schedule import Policy
 class SaturnSession:
     def __init__(self, cluster: ClusterSpec,
                  hardware: HardwareSpec = HARDWARE["a100"],
-                 cache_path: Optional[str] = None):
+                 cache_path: Optional[str] = None,
+                 library: Optional[ParallelismLibrary] = None):
         self.cluster = cluster
-        self.library = ParallelismLibrary()
+        self.library = library or ParallelismLibrary()
         self.runner = TrialRunner(self.library, hardware, cache_path)
         # mixed fleets: derive per-class hardware (speed_hint-scaled
         # rates, per-class HBM) so trials land at realistic speeds
@@ -121,8 +122,19 @@ class SaturnSession:
             time_limit_s: Optional[float] = None,
             mip_gap: Optional[float] = None,
             refine: Optional[bool] = None,
-            incremental: Optional[bool] = None) -> SimResult:
+            incremental: Optional[bool] = None,
+            backend: str = "sim",
+            ckpt_dir: Optional[str] = None) -> SimResult:
         """Solve + execute on the cluster runtime.
+
+        ``backend`` selects the execution substrate the one Schedule IR
+        drives: ``"sim"`` (default) runs in virtual time on the
+        :class:`~repro.core.runtime.SimBackend`; ``"local"`` REALLY
+        trains the models on this machine's JAX devices via
+        :class:`~repro.core.local_backend.LocalJaxBackend` —
+        checkpointed preemption, wall-clock introspection intervals, and
+        measured step times fed back into the replans.  ``ckpt_dir``
+        (local only) pins where checkpoints land.
 
         ``placement`` overrides ``cluster.placement`` for this run.
 
@@ -142,6 +154,11 @@ class SaturnSession:
             raise ValueError(
                 f"solver knobs {sorted(knobs)} only apply to the default "
                 f"SaturnPolicy; configure your policy directly")
+        if backend not in ("sim", "local"):
+            raise ValueError(f"unknown execution backend {backend!r}; "
+                             f"expected 'sim' or 'local'")
+        if ckpt_dir is not None and backend != "local":
+            raise ValueError("ckpt_dir only applies to backend='local'")
         if not self.profiles:
             self.profile()
         policy = policy or SaturnPolicy(**knobs)
@@ -150,7 +167,12 @@ class SaturnSession:
             # the policy must see the same placement the runtime enforces
             # (node-aware Saturn switches MILPs on it)
             cluster = dataclasses.replace(cluster, placement=placement)
+        exec_backend = None
+        if backend == "local":
+            from .local_backend import LocalJaxBackend
+            exec_backend = LocalJaxBackend(self.library, ckpt_dir=ckpt_dir)
         return simulate(self.jobs, policy, self.profiles, cluster,
                         introspect_every_s=introspect_every_s
                         if policy.dynamic else None,
-                        noise_sigma=noise_sigma)
+                        noise_sigma=noise_sigma,
+                        exec_backend=exec_backend)

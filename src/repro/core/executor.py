@@ -30,11 +30,15 @@ def simulate(jobs: List[Job], policy: Policy,
              introspect_every_s: Optional[float] = None,
              noise_sigma: float = 0.1, noise_seed: int = 0,
              max_events: int = 100000,
-             placement: Optional[str] = None) -> SimResult:
+             placement: Optional[str] = None,
+             exec_backend=None) -> SimResult:
     """Compatibility wrapper: run on the event-driven runtime.
 
     ``placement`` overrides ``cluster.placement`` ("flat" keeps the
     historical single-pool behavior; "node" enforces node locality).
+    ``exec_backend`` selects the execution substrate (default: the
+    virtual-time :class:`~repro.core.runtime.SimBackend`; pass a
+    :class:`~repro.core.local_backend.LocalJaxBackend` to really train).
     """
     import dataclasses as _dc
     if placement is not None and \
@@ -45,7 +49,8 @@ def simulate(jobs: List[Job], policy: Policy,
     return simulate_runtime(jobs, policy, profiles, cluster,
                             introspect_every_s=introspect_every_s,
                             noise_sigma=noise_sigma, noise_seed=noise_seed,
-                            max_events=max_events)
+                            max_events=max_events,
+                            exec_backend=exec_backend)
 
 
 def simulate_legacy(jobs: List[Job], policy: Policy,
@@ -196,7 +201,13 @@ def simulate_legacy(jobs: List[Job], policy: Policy,
 class LocalRunner:
     """Really execute a plan on this machine (reduced models, CPU): jobs
     run in list order under their assigned technique, with checkpointing.
-    Used by the end-to-end examples; wall-times feed back as profiles."""
+    Used by the end-to-end examples; wall-times feed back as profiles.
+
+    (The cluster runtime's real-execution path is
+    :class:`~repro.core.local_backend.LocalJaxBackend`, which runs the
+    Schedule IR concurrently with preemption; this runner is the simple
+    serial building block.)
+    """
 
     def __init__(self, cluster_devices=None, ckpt_dir: str = "/tmp/saturn_ckpts"):
         self.devices = cluster_devices
@@ -204,12 +215,19 @@ class LocalRunner:
 
     def run_job(self, job: Job, technique, n_devices: int, *,
                 steps: Optional[int] = None, resume: bool = True):
+        """Train ``job`` for ``steps`` (default: its remaining steps),
+        resuming state AND data position from its checkpoint.
+
+        The first step after (re)launch is the JIT compile; it is timed
+        separately (``compile_s``) so ``wall_s`` / ``step_time_s`` hold
+        pure training time — compile time used to be folded into
+        ``wall_s``, poisoning any profile feedback derived from it.
+        """
         import time as _time
 
         import jax
 
-        from ..checkpoint.store import (load_checkpoint, load_metadata,
-                                        save_checkpoint)
+        from ..checkpoint.store import load_training_state, save_checkpoint
         from ..data.synthetic import SyntheticLM
         from ..parallelism.build import BuiltJob
 
@@ -219,24 +237,33 @@ class LocalRunner:
         params, opt = built.init(jax.random.PRNGKey(job.seed))
         start_step = 0
         path = f"{self.ckpt_dir}/{job.name}.npz"
-        import os
-        if resume and os.path.exists(path):
-            meta = load_metadata(path) or {}
-            start_step = int(meta.get("step", 0))
-            state = load_checkpoint(path, {"params": params, "opt": opt})
-            params, opt = state["params"], state["opt"]
+        if resume:
+            params, opt, start_step = load_training_state(path, params, opt)
         n = steps if steps is not None else job.total_steps - start_step
         data = SyntheticLM(job.cfg, seed=job.seed).batches(
-            job.batch_size, job.seq_len, num_batches=n)
-        t0 = _time.perf_counter()
+            job.batch_size, job.seq_len, num_batches=n, skip=start_step)
         m = {}
-        for b in data:
+        compile_s = 0.0
+        it = iter(data)
+        first = next(it, None)
+        if first is not None:
+            t0 = _time.perf_counter()
+            params, opt, m = built.step(params, opt,
+                                        built.place_batch(first))
+            jax.block_until_ready(params)
+            compile_s = _time.perf_counter() - t0
+        t0 = _time.perf_counter()
+        for b in it:
             params, opt, m = built.step(params, opt, built.place_batch(b))
         jax.block_until_ready(params)
         dt = _time.perf_counter() - t0
         save_checkpoint(path, {"params": params, "opt": opt},
                         {"step": start_step + n,
                          "loss": float(m.get("loss", float("nan")))})
+        # a single-step call cannot separate compile from compute: its
+        # step time is unknowable, not compile_s — report it as such
         return {"job": job.name, "steps": n, "wall_s": dt,
+                "compile_s": compile_s,
+                "step_time_s": dt / (n - 1) if n > 1 else float("nan"),
                 "loss": float(m.get("loss", float("nan"))),
                 "done": start_step + n >= job.total_steps}

@@ -55,9 +55,23 @@ class ParallelismLibrary:
             json.dump({"techniques": self.names()}, f)
 
     @staticmethod
-    def load(path: str, available: Optional[Iterable[Technique]] = None
-             ) -> "ParallelismLibrary":
+    def load(path: str, available: Optional[Iterable[Technique]] = None,
+             strict: bool = True) -> "ParallelismLibrary":
+        """Rebuild a library from saved technique names, resolved
+        against ``available`` (default: the built-in techniques).
+
+        Saved names missing from the pool raise ``KeyError`` listing
+        them — a silently shrunken library would make the Solver skip
+        choices the user thinks are registered.  ``strict=False``
+        restores the old drop-silently behavior.
+        """
         with open(path) as f:
             names = set(json.load(f)["techniques"])
         pool = {t.name: t for t in (available or DEFAULT_TECHNIQUES)}
+        missing = sorted(names - set(pool))
+        if missing and strict:
+            raise KeyError(
+                f"techniques {missing} are not in the available pool "
+                f"{sorted(pool)}; register them (the ``available`` "
+                f"argument) or pass strict=False to drop them")
         return ParallelismLibrary([pool[n] for n in names if n in pool])

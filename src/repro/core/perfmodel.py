@@ -31,6 +31,7 @@ exact, computed for every count without a trial) and *memory fit*
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from collections.abc import Mapping
 from typing import Dict, Iterable, Iterator, List, Optional, Tuple
@@ -289,6 +290,52 @@ class PerfModel(Mapping):
     def to_dict(self) -> Dict[Tuple, Profile]:
         """Materialize the full grid as a plain dict (legacy export)."""
         return {k: self[k] for k in self._keys}
+
+
+class ObservedProfiles(Mapping):
+    """A read-only overlay of MEASURED step times on top of a base
+    profile representation (a plain dict or a :class:`PerfModel`).
+
+    The real-execution backend records observed per-step wall times as
+    launches run; introspection replans plan over this view, so the
+    combos actually executing carry ground truth while everything else
+    keeps its estimate — the paper's introspection loop closed over
+    measured throughput.  The base is never mutated, and the overlay
+    enumerates exactly the base's keys (same Mapping contract every
+    dict-shaped consumer already holds).  ``observed`` maps the base's
+    own profile keys (see :func:`profile_key`) to measured seconds.
+    """
+
+    def __init__(self, base, observed: Dict[Tuple, float]):
+        self._base = base
+        self._observed = dict(observed)
+
+    def _lookup(self, key: Tuple) -> Optional[float]:
+        # bases accept both 3-tuple (job, tech, g) and default-class
+        # 4-tuple keys for the same combo; normalize before matching
+        o = self._observed.get(key)
+        if o is not None:
+            return o
+        if len(key) == 4 and key[2] == DEFAULT_CLASS:
+            return self._observed.get((key[0], key[1], key[3]))
+        if len(key) == 3:
+            return self._observed.get(
+                (key[0], key[1], DEFAULT_CLASS, key[2]))
+        return None
+
+    def __getitem__(self, key: Tuple) -> Profile:
+        p = self._base[key]
+        o = self._lookup(key)
+        if o is None:
+            return p
+        return dataclasses.replace(p, step_time_s=float(o),
+                                   source="observed")
+
+    def __iter__(self) -> Iterator[Tuple]:
+        return iter(self._base)
+
+    def __len__(self) -> int:
+        return len(self._base)
 
 
 # ------------------------------------------------- dict/model adapters

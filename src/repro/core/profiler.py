@@ -340,20 +340,33 @@ class TrialRunner:
             raise RuntimeError(
                 f"empirical profiling needs {n_devices} local devices")
         tech = self.library.get(technique)
-        plan = tech.plan(job.cfg, n_devices)
-        built = BuiltJob(job.cfg, plan, job.opt_cfg,
-                         devices=jax.devices()[:n_devices])
-        params, opt = built.init(jax.random.PRNGKey(0))
-        batch = built.place_batch(
-            concrete_batch(job.cfg, job.batch_size, job.seq_len))
-        # 1 warmup (compile) + 2 timed minibatches, per the paper
-        params, opt, _ = built.step(params, opt, batch)
-        jax.block_until_ready(params)
-        t0 = time.perf_counter()
-        for _ in range(2):
+        try:
+            plan = tech.plan(job.cfg, n_devices)
+            built = BuiltJob(job.cfg, plan, job.opt_cfg,
+                             devices=jax.devices()[:n_devices])
+            params, opt = built.init(jax.random.PRNGKey(0))
+            batch = built.place_batch(
+                concrete_batch(job.cfg, job.batch_size, job.seq_len))
+            # 1 warmup (compile) + 2 timed minibatches, per the paper
             params, opt, _ = built.step(params, opt, batch)
-        jax.block_until_ready(params)
-        dt = (time.perf_counter() - t0) / 2
+            jax.block_until_ready(params)
+            t0 = time.perf_counter()
+            for _ in range(2):
+                params, opt, _ = built.step(params, opt, batch)
+            jax.block_until_ready(params)
+            dt = (time.perf_counter() - t0) / 2
+        except (AssertionError, ValueError, TypeError, ZeroDivisionError,
+                RuntimeError) as e:
+            # a trial that cannot even build/run its step for THIS
+            # job's concrete shape (e.g. pipeline microbatching vs the
+            # batch size) is an infeasible choice, not a crashed sweep
+            # — exactly what a real cluster trial would conclude
+            print(f"trial {job.name}/{technique}x{n_devices} failed "
+                  f"({e!r}); recording infeasible")
+            return Profile(job.name, technique, n_devices, float("inf"),
+                           float("inf"), False, "empirical",
+                           {"trial_error": 1.0},
+                           device_class=device_class)
         mem = self._mem_estimate(job, plan)
         return Profile(job.name, technique, n_devices, dt, mem,
                        mem <= hw.hbm_capacity, "empirical",

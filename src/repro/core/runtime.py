@@ -1,39 +1,41 @@
-"""ClusterState + event-driven execution engine.
+"""ClusterState + the backend-agnostic event-driven execution engine.
 
-Replaces the monolithic ``simulate()`` while-loop with an explicit
-discrete-event simulation over :mod:`.events`:
+The engine (:func:`execute_runtime`) owns everything a *scheduler
+runtime* owns — the event queue, job phases, placement, replans with
+preemption diffs, Gantt + per-device-class GPU-second accounting — and
+delegates everything an *execution substrate* owns to an
+:class:`ExecutionBackend`: launching a (job, technique, device-set)
+choice, polling its progress, preempting it with a checkpoint, and the
+meaning of the clock.  Two backends implement the protocol:
+
+- :class:`SimBackend` — virtual time.  Step times are profile estimates
+  x seeded noise, completions are computed exactly at launch, and the
+  clock simply follows event timestamps.  This is bit-exact with the
+  historical ``simulate()`` loop: ``simulate_runtime`` (the compat
+  entry point) constructs one by default, and the legacy equivalence
+  tests pin the contract.
+- :class:`~repro.core.local_backend.LocalJaxBackend` — real execution.
+  Each launch starts an actual JAX training loop on the placement's
+  device slice, completions are *predicted* events corrected against
+  measured progress, preemption really checkpoints, and the clock is
+  the wall clock.  Measured step times feed back into the profiles the
+  policy replans over (the paper's introspection loop, for real).
+
+Engine semantics (shared by both backends):
 
 - jobs arrive at ``Job.arrival_s`` (online workloads) and policies
   replan on arrival batches;
 - preempted jobs pay a REAL restart penalty: their GPUs are released at
   preemption time but the job is only admissible again when its
-  :class:`RestartDone` event fires at ``t + restart_cost_s`` (the legacy
-  loop re-admitted them immediately while also recording a restart
-  Gantt entry — double-booking the GPUs);
+  :class:`RestartDone` event fires at ``t + restart_cost_s``;
 - placement is pluggable (:mod:`.placement`): flat pool, node-aware, or
-  per-device-class pools on heterogeneous clusters, so the executor can
-  honor what ``solve_joint_nodes`` / ``solve_joint_classes`` plan;
+  per-device-class pools on heterogeneous clusters;
 - every Gantt entry records the concrete device set (and device class)
   it occupied, and the engine asserts GPU-second conservation PER
-  DEVICE CLASS before returning — not just globally — so a migration
-  bug that double-books one class while under-booking another cannot
-  cancel out;
-- an introspection replan may migrate a job across device classes: the
-  assignment diff includes the class, so the job pays exactly one
-  restart penalty and relaunches from the new class's pool;
+  DEVICE CLASS before returning;
 - replans are warm-start-capable: the engine hands the previous
   Schedule, the current time and the running set to
-  :meth:`Policy.plan_incremental`, so a policy can fix running jobs in
-  place and re-solve only the residual (SaturnPolicy does; the default
-  delegates to ``plan`` and reproduces the historical behavior exactly).
-
-The simulator separates *estimated* step times (what policies see, from
-the Trial Runner — either an exhaustive profile dict or a curve-backed
-:class:`~repro.core.perfmodel.PerfModel`) from *true* step times
-(estimate x seeded noise), so
-dynamic policies (introspection) win for the same reason they do on a
-real cluster: plans based on estimates drift from reality, and
-re-solving on observed remaining work recovers the gap.
+  :meth:`Policy.plan_incremental`.
 """
 from __future__ import annotations
 
@@ -72,6 +74,9 @@ class SimResult:
     gantt: List[GanttEntry]
     replans: int = 0
     restarts: int = 0
+    # execution-backend extras (LocalJaxBackend fills per-job segment
+    # stats: losses, measured step times, compile costs); {} for sim
+    stats: Dict[str, dict] = dataclasses.field(default_factory=dict)
 
     def utilization(self, cluster: ClusterSpec) -> float:
         busy = sum((g.end_s - g.start_s) * g.n_gpus for g in self.gantt
@@ -91,7 +96,11 @@ def _noise_factors(jobs, profiles, seed: int, sigma: float):
 
 
 @dataclasses.dataclass
-class _Running:
+class LaunchHandle:
+    """One live launch: what the engine tracks between ``launch`` and
+    completion/preemption.  Backends may subclass to carry substrate
+    state (the sim keeps its true step time; the local backend keeps a
+    worker thread)."""
     job: Job
     technique: str
     n_gpus: int
@@ -106,74 +115,147 @@ class _Running:
         return getattr(self.placement, "device_class", DEFAULT_CLASS)
 
 
-class ClusterState:
-    """Mutable simulation state: job phases, remaining work, placements,
-    the Gantt log under construction, and per-device-class GPU-second
-    accounting (the runtime's conservation invariant)."""
-
-    def __init__(self, jobs: List[Job], backend: PlacementBackend):
-        self.by_name: Dict[str, Job] = {j.name: j for j in jobs}
-        self.remaining: Dict[str, int] = {j.name: j.total_steps for j in jobs}
-        self.arrived: set = set()
-        self.waiting: List[str] = []
-        self.restarting: set = set()
-        self.running: Dict[str, _Running] = {}
-        self.backend = backend
-        self.gantt: List[GanttEntry] = []
-        self.current_assign: Dict[str, Tuple] = {}
-        self.busy_gpu_s: Dict[str, float] = {}   # device class -> GPU-seconds
-        self._alloc_open: Dict[int, Tuple[float, int, str]] = {}
-        self.t = 0.0
-
-    def settle(self, upto_t: float) -> None:
-        """Account finished steps for running jobs up to ``upto_t``."""
-        for name, r in self.running.items():
-            done = int((upto_t - r.start_s) / r.true_step_s)
-            self.remaining[name] = max(0, r.steps_at_start - done)
-
-    def note_alloc(self, token: int, t: float, n_gpus: int,
-                   device_class: str) -> None:
-        """Record an allocation at LAUNCH time.  This bookkeeping is
-        written on the launch path (start_fitting), independently of the
-        Gantt entries written on the release paths, so the conservation
-        check reconciles two genuinely distinct records."""
-        self._alloc_open[token] = (t, n_gpus, device_class)
-
-    def close_alloc(self, token: int, end_s: float) -> None:
-        """Close an allocation at release time and charge its class."""
-        t0, n, dc = self._alloc_open.pop(token)
-        self.busy_gpu_s[dc] = self.busy_gpu_s.get(dc, 0.0) \
-            + (end_s - t0) * n
-
-    def log_run(self, name: str, r: _Running, end_s: float) -> None:
-        """Close a run segment: Gantt entry + launch-side accounting."""
-        self.close_alloc(r.token, end_s)
-        self.gantt.append(GanttEntry(
-            name, r.technique, r.n_gpus, r.start_s, end_s,
-            devices=r.placement.devices, device_class=r.device_class))
-
-    def live_jobs(self) -> List[Job]:
-        """Arrived, unfinished jobs (running, waiting, or restarting) —
-        what planners plan over."""
-        return [self.by_name[n] for n in self.by_name
-                if n in self.arrived and self.remaining[n] > 0]
-
-    def all_done(self) -> bool:
-        return all(v == 0 for v in self.remaining.values())
+# Backward-compat alias: the handle used to be the runtime-private
+# ``_Running`` record.
+_Running = LaunchHandle
 
 
-def verify_conservation(state: ClusterState) -> None:
+class ExecutionBackend:
+    """The launch / preempt-with-checkpoint / poll-progress / clock
+    protocol between the engine and an execution substrate.
+
+    ``exact_completions`` declares whether the :class:`JobCompletion`
+    events this backend's launches schedule are exact (virtual time) or
+    predictions the engine must verify against real progress when they
+    fire.  ``virtual`` declares whether the clock is simulated (the
+    engine never blocks) or real (``wait_until`` sleeps).
+    """
+
+    kind = "base"
+    virtual = True
+    exact_completions = True
+
+    # ------------------------------------------------------------- setup
+    def bind(self, jobs: List[Job], profiles, cluster: ClusterSpec) -> None:
+        """Called once per run before any event is processed."""
+        self._profiles = profiles
+        self._cluster = cluster
+
+    # ------------------------------------------------------------- clock
+    def event_time(self, ev) -> float:
+        """What the engine clock reads when ``ev`` is processed."""
+        return ev.t
+
+    def wait_until(self, t: float) -> None:
+        """Block until the clock reaches ``t`` (real backends; may
+        return early when a launch finishes).  Virtual clocks no-op."""
+
+    def drain_finished(self) -> Tuple[LaunchHandle, ...]:
+        """Launches that finished since the last drain (real backends
+        deliver completions through here; exact backends through the
+        events they scheduled at launch)."""
+        return ()
+
+    # ---------------------------------------------------------- estimates
+    def est_step(self, job: str, tech: str, g: int,
+                 device_class: Optional[str] = None) -> float:
+        """Estimated step time (profiles / performance model).  Curve-
+        backed models answer at ANY count, so introspection replans may
+        pick counts nobody profiled."""
+        return step_time_of(self._profiles, job, tech, g,
+                            device_class=device_class)
+
+    def planning_profiles(self):
+        """The profile view policies plan over.  The sim returns the
+        bound profiles untouched (identity matters: solver choice caches
+        key on it); real backends overlay measured step times."""
+        return self._profiles
+
+    # ------------------------------------------------------ run lifecycle
+    def launch(self, job: Job, entry, placement: Placement,
+               device_class: str, remaining: int, t: float,
+               token: int) -> LaunchHandle:
+        raise NotImplementedError
+
+    def eta(self, handle: LaunchHandle) -> float:
+        """(Predicted) completion time of a launch."""
+        raise NotImplementedError
+
+    def steps_done(self, handle: LaunchHandle, upto_t: float) -> int:
+        """Poll progress: steps finished since this launch started."""
+        raise NotImplementedError
+
+    def is_finished(self, handle: LaunchHandle) -> bool:
+        """Whether the launch has really completed (real backends)."""
+        return True
+
+    def preempt(self, handle: LaunchHandle, t: float) -> int:
+        """Stop a launch, checkpointing its state; returns the steps it
+        completed.  The engine releases devices and charges the restart
+        penalty."""
+        raise NotImplementedError
+
+    def complete(self, handle: LaunchHandle, t: float) -> None:
+        """Normal-completion cleanup (join workers, record stats)."""
+
+    def result_stats(self) -> Dict[str, dict]:
+        """Per-job execution stats for :class:`SimResult` (may be {})."""
+        return {}
+
+
+class SimBackend(ExecutionBackend):
+    """Virtual-time execution: estimate x seeded noise, exact completion
+    events, instant clock.  Bit-exact with the historical ``simulate()``
+    while-loop (the runtime/legacy equivalence tests pin this)."""
+
+    kind = "sim"
+    virtual = True
+    exact_completions = True
+
+    def __init__(self, noise_sigma: float = 0.1, noise_seed: int = 0):
+        self.noise_sigma = noise_sigma
+        self.noise_seed = noise_seed
+
+    def bind(self, jobs, profiles, cluster) -> None:
+        super().bind(jobs, profiles, cluster)
+        self._noise = _noise_factors(jobs, profiles, self.noise_seed,
+                                     self.noise_sigma)
+
+    def _true_step(self, job: str, tech: str, g: int,
+                   device_class: Optional[str]) -> float:
+        key = profile_key(self._profiles, job, tech, g, device_class)
+        return self.est_step(job, tech, g, device_class) * \
+            self._noise.get(key, 1.0)
+
+    def launch(self, job, entry, placement, device_class, remaining, t,
+               token) -> LaunchHandle:
+        st = self._true_step(job.name, entry.technique, entry.n_gpus,
+                             device_class)
+        return LaunchHandle(job, entry.technique, entry.n_gpus, placement,
+                            t, st, remaining, token)
+
+    def eta(self, handle: LaunchHandle) -> float:
+        return handle.start_s + handle.steps_at_start * handle.true_step_s
+
+    def steps_done(self, handle: LaunchHandle, upto_t: float) -> int:
+        return int((upto_t - handle.start_s) / handle.true_step_s)
+
+    def preempt(self, handle: LaunchHandle, t: float) -> int:
+        return self.steps_done(handle, t)
+
+
+def verify_conservation(state: "ClusterState") -> None:
     """GPU-second conservation, per device class.
 
     Reconciles the launch-side allocation bookkeeping (token -> launch
     time / size / class, written in ``start_fitting`` from the actual
     Placement) against the release-side Gantt segments (written from the
-    ``_Running`` record), and both against the concrete device ids those
-    segments claim.  A device double-booked within its class, a segment
-    whose devices belong to a different class than recorded, a launch
-    whose placement was never released, or busy-seconds leaking from one
-    class to another all fail here — even when the GLOBAL totals happen
-    to balance out.
+    :class:`LaunchHandle`), and both against the concrete device ids
+    those segments claim.  A device double-booked within its class, a
+    segment whose devices belong to a different class than recorded, a
+    launch whose placement was never released, or busy-seconds leaking
+    from one class to another all fail here — even when the GLOBAL
+    totals happen to balance out.
     """
     if state._alloc_open:
         raise RuntimeError(
@@ -214,16 +296,67 @@ def verify_conservation(state: ClusterState) -> None:
                     f"{j1}[{s1},{e1}] overlaps {j2}[{s2},{e2}]")
 
 
-def simulate_runtime(jobs: List[Job], policy: Policy,
-                     profiles: Dict[Tuple[str, str, int], Profile],
-                     cluster: ClusterSpec, *,
-                     introspect_every_s: Optional[float] = None,
-                     noise_sigma: float = 0.1, noise_seed: int = 0,
-                     max_events: int = 100000,
-                     backend: Optional[PlacementBackend] = None) -> SimResult:
-    """Run ``jobs`` under ``policy`` on the event-driven cluster runtime."""
-    noise = _noise_factors(jobs, profiles, noise_seed, noise_sigma)
+class ClusterState:
+    """Mutable runtime state: job phases, remaining work, live launch
+    handles, the Gantt log under construction, and per-device-class
+    GPU-second accounting (the runtime's conservation invariant)."""
+
+    def __init__(self, jobs: List[Job], backend: PlacementBackend):
+        self.by_name: Dict[str, Job] = {j.name: j for j in jobs}
+        self.remaining: Dict[str, int] = {j.name: j.total_steps for j in jobs}
+        self.arrived: set = set()
+        self.waiting: List[str] = []
+        self.restarting: set = set()
+        self.running: Dict[str, LaunchHandle] = {}
+        self.backend = backend
+        self.gantt: List[GanttEntry] = []
+        self.current_assign: Dict[str, Tuple] = {}
+        self.busy_gpu_s: Dict[str, float] = {}   # device class -> GPU-seconds
+        self._alloc_open: Dict[int, Tuple[float, int, str]] = {}
+        self.t = 0.0
+
+    def note_alloc(self, token: int, t: float, n_gpus: int,
+                   device_class: str) -> None:
+        """Record an allocation at LAUNCH time.  This bookkeeping is
+        written on the launch path (start_fitting), independently of the
+        Gantt entries written on the release paths, so the conservation
+        check reconciles two genuinely distinct records."""
+        self._alloc_open[token] = (t, n_gpus, device_class)
+
+    def close_alloc(self, token: int, end_s: float) -> None:
+        """Close an allocation at release time and charge its class."""
+        t0, n, dc = self._alloc_open.pop(token)
+        self.busy_gpu_s[dc] = self.busy_gpu_s.get(dc, 0.0) \
+            + (end_s - t0) * n
+
+    def log_run(self, name: str, r: LaunchHandle, end_s: float) -> None:
+        """Close a run segment: Gantt entry + launch-side accounting."""
+        self.close_alloc(r.token, end_s)
+        self.gantt.append(GanttEntry(
+            name, r.technique, r.n_gpus, r.start_s, end_s,
+            devices=r.placement.devices, device_class=r.device_class))
+
+    def live_jobs(self) -> List[Job]:
+        """Arrived, unfinished jobs (running, waiting, or restarting) —
+        what planners plan over."""
+        return [self.by_name[n] for n in self.by_name
+                if n in self.arrived and self.remaining[n] > 0]
+
+    def all_done(self) -> bool:
+        return all(v == 0 for v in self.remaining.values())
+
+
+def execute_runtime(jobs: List[Job], policy: Policy,
+                    profiles: Dict[Tuple[str, str, int], Profile],
+                    cluster: ClusterSpec, *,
+                    exec_backend: ExecutionBackend,
+                    introspect_every_s: Optional[float] = None,
+                    max_events: int = 100000,
+                    backend: Optional[PlacementBackend] = None) -> SimResult:
+    """Run ``jobs`` under ``policy`` on the event-driven engine, with
+    execution delegated to ``exec_backend`` (sim or real)."""
     backend = backend or make_backend(cluster)
+    exec_backend.bind(jobs, profiles, cluster)
     state = ClusterState(jobs, backend)
     q = EventQueue()
     for j in jobs:
@@ -237,14 +370,12 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
     launch_tokens = {}            # job -> token of its current launch
     next_token = [0]
 
-    def est_step(jname, tech, g, dclass=None):
-        # curve-backed performance models answer at ANY count, so
-        # introspection replans may pick counts nobody profiled
-        return step_time_of(profiles, jname, tech, g, device_class=dclass)
-
-    def true_step(jname, tech, g, dclass=None):
-        key = profile_key(profiles, jname, tech, g, dclass)
-        return est_step(jname, tech, g, dclass) * noise.get(key, 1.0)
+    def settle(upto_t: float) -> None:
+        """Account finished steps for running jobs up to ``upto_t``
+        (sim: computed from true step times; real: polled counters)."""
+        for name, h in state.running.items():
+            done = exec_backend.steps_done(h, upto_t)
+            state.remaining[name] = max(0, h.steps_at_start - done)
 
     def allocate_for(entry):
         """Place one entry: class-pinned entries draw from their class's
@@ -255,8 +386,8 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
                 and len(backend.classes) > 1:
             for dc in backend.classes:
                 try:
-                    st = est_step(entry.job, entry.technique,
-                                  entry.n_gpus, dc.name)
+                    st = exec_backend.est_step(entry.job, entry.technique,
+                                               entry.n_gpus, dc.name)
                 except KeyError:
                     continue  # unprofiled on this class (e.g. count
                     #           exceeds the class's capacity grid)
@@ -290,18 +421,17 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
                 if pl is None:
                     continue
                 dclass = getattr(pl, "device_class", DEFAULT_CLASS)
-                st = true_step(name, entry.technique, entry.n_gpus, dclass)
                 next_token[0] += 1
                 tok = next_token[0]
+                h = exec_backend.launch(state.by_name[name], entry, pl,
+                                        dclass, state.remaining[name],
+                                        state.t, tok)
                 state.note_alloc(tok, state.t, pl.n_gpus, dclass)
-                state.running[name] = _Running(
-                    state.by_name[name], entry.technique, entry.n_gpus,
-                    pl, state.t, st, state.remaining[name], tok)
+                state.running[name] = h
                 launch_tokens[name] = tok
                 state.current_assign[name] = entry.assignment
                 state.waiting.remove(name)
-                q.push(JobCompletion(
-                    state.t + state.remaining[name] * st, name, tok))
+                q.push(JobCompletion(exec_backend.eta(h), name, tok))
                 progressed = True
                 break
 
@@ -312,10 +442,11 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
             return
         # warm-start-capable policies get the previous schedule, the
         # current time and the running set and may re-solve only the
-        # residual; the default delegates to plan() unchanged
+        # residual; the default delegates to plan() unchanged.  Real
+        # backends hand over measured step times where observed.
         order = Schedule.coerce(policy.plan_incremental(
-            live, dict(state.remaining), profiles, cluster,
-            dict(state.current_assign), prev=order, now_s=state.t,
+            live, dict(state.remaining), exec_backend.planning_profiles(),
+            cluster, dict(state.current_assign), prev=order, now_s=state.t,
             running=frozenset(state.running)))
         replans += 1
         if preempt:
@@ -323,16 +454,25 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
             for name in list(state.running):
                 if name in new_assign and \
                         new_assign[name] != state.current_assign.get(name):
-                    r = state.running.pop(name)
-                    backend.release(r.placement)
-                    state.log_run(name, r, state.t)
+                    h = state.running.pop(name)
+                    done = exec_backend.preempt(h, state.t)
+                    backend.release(h.placement)
+                    state.log_run(name, h, state.t)
+                    if done >= h.steps_at_start:
+                        # a real worker can finish its whole budget
+                        # while the replan solve was running: that is a
+                        # completion, not a restart (unreachable in
+                        # virtual time — a sim completion event always
+                        # fires before its job reaches this branch)
+                        state.remaining[name] = 0
+                        continue
                     # checkpoint + relaunch penalty: the job is only
                     # admissible again when RestartDone fires
                     state.gantt.append(GanttEntry(
                         name, "restart", 0, state.t,
                         state.t + cluster.restart_cost_s, kind="restart",
-                        device_class=r.device_class))
-                    state.remaining[name] = max(1, state.remaining[name])
+                        device_class=h.device_class))
+                    state.remaining[name] = max(1, h.steps_at_start - done)
                     state.restarting.add(name)
                     q.push(RestartDone(
                         state.t + cluster.restart_cost_s, name))
@@ -346,9 +486,10 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
         if not state.all_done():
             return False
         for name in list(state.running):
-            r = state.running.pop(name)
-            backend.release(r.placement)
-            state.log_run(name, r, t)
+            h = state.running.pop(name)
+            exec_backend.complete(h, t)
+            backend.release(h.placement)
+            state.log_run(name, h, t)
         return True
 
     events = 0
@@ -358,11 +499,25 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
         ev = q.pop()
         events += 1
         if events > max_events:
-            raise RuntimeError("simulate_runtime: event cap hit")
+            raise RuntimeError("execute_runtime: event cap hit")
+
+        if not exec_backend.exact_completions:
+            # real clock: sleep until the event's timestamp (interrupted
+            # early if a launch finishes), then deliver real completions
+            # at their actual finish time before the scheduled event
+            exec_backend.wait_until(ev.t)
+            finished = exec_backend.drain_finished()
+            if finished:
+                for h in finished:
+                    q.push(JobCompletion(
+                        exec_backend.event_time(ev) if h.finish_t is None
+                        else h.finish_t, h.job.name, h.token))
+                q.push(ev)
+                continue
 
         if isinstance(ev, JobArrival):
-            state.t = ev.t
-            state.settle(ev.t)   # replan must see observed progress
+            state.t = exec_backend.event_time(ev)
+            settle(state.t)   # replan must see observed progress
             batch = [ev] + q.pop_while(JobArrival, ev.t)
             for e in batch:
                 state.arrived.add(e.job.name)
@@ -379,13 +534,20 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
             if launch_tokens.get(ev.job) != ev.token or \
                     ev.job not in state.running:
                 continue                       # stale (preempted launch)
-            state.t = ev.t
-            state.settle(ev.t)
-            r = state.running.pop(ev.job)
+            h = state.running[ev.job]
+            if not exec_backend.exact_completions and \
+                    not exec_backend.is_finished(h):
+                # the prediction fired early: re-aim at measured progress
+                q.push(JobCompletion(exec_backend.eta(h), ev.job, ev.token))
+                continue
+            state.t = exec_backend.event_time(ev)
+            settle(state.t)
+            state.running.pop(ev.job)
+            exec_backend.complete(h, state.t)
             state.remaining[ev.job] = 0
-            backend.release(r.placement)
-            state.log_run(ev.job, r, ev.t)
-            if finalize_if_done(ev.t):
+            backend.release(h.placement)
+            state.log_run(ev.job, h, state.t)
+            if finalize_if_done(state.t):
                 break
             if policy.dynamic and policy.replan_on_completion and \
                     state.waiting:
@@ -393,7 +555,7 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
             start_fitting()
 
         elif isinstance(ev, RestartDone):
-            state.t = ev.t
+            state.t = exec_backend.event_time(ev)
             state.restarting.discard(ev.job)
             state.waiting.append(ev.job)
             start_fitting()
@@ -407,11 +569,16 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
                 # settle or replan
                 q.push(IntrospectionTick(ev.t + introspect_every_s))
                 continue
-            state.t = ev.t
-            state.settle(ev.t)
+            state.t = exec_backend.event_time(ev)
+            settle(state.t)
             if policy.dynamic:
                 replan(preempt=True)
-            q.push(IntrospectionTick(ev.t + introspect_every_s))
+            # chain from the engine clock, not the event's timestamp:
+            # on a real backend the tick's work (preempt joins, MILP
+            # solves) may overrun ev.t by seconds, and chaining from
+            # ev.t would fire a burst of back-to-back catch-up replans.
+            # Virtual time has state.t == ev.t, so the sim is unchanged.
+            q.push(IntrospectionTick(state.t + introspect_every_s))
             start_fitting()
 
         # deadlock: nothing running, nothing can ever start it
@@ -426,4 +593,24 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
         raise RuntimeError(f"runtime drained with unfinished jobs: "
                            f"{unfinished}")
     verify_conservation(state)
-    return SimResult(policy.name, state.t, state.gantt, replans, restarts)
+    return SimResult(policy.name, state.t, state.gantt, replans, restarts,
+                     stats=exec_backend.result_stats())
+
+
+def simulate_runtime(jobs: List[Job], policy: Policy,
+                     profiles: Dict[Tuple[str, str, int], Profile],
+                     cluster: ClusterSpec, *,
+                     introspect_every_s: Optional[float] = None,
+                     noise_sigma: float = 0.1, noise_seed: int = 0,
+                     max_events: int = 100000,
+                     backend: Optional[PlacementBackend] = None,
+                     exec_backend: Optional[ExecutionBackend] = None
+                     ) -> SimResult:
+    """Run ``jobs`` under ``policy`` on the event-driven cluster runtime
+    (default execution backend: :class:`SimBackend` in virtual time)."""
+    exec_backend = exec_backend or SimBackend(noise_sigma=noise_sigma,
+                                              noise_seed=noise_seed)
+    return execute_runtime(jobs, policy, profiles, cluster,
+                           exec_backend=exec_backend,
+                           introspect_every_s=introspect_every_s,
+                           max_events=max_events, backend=backend)

@@ -28,31 +28,46 @@ class SyntheticLM:
         v = cfg.vocab_size
         self._perm = rng.permutation(v)
 
-    def batches(self, batch: int, seq: int, *, dtype=jnp.float32,
-                num_batches: Optional[int] = None) -> Iterator[dict]:
+    def _raw_batch(self, rng: np.random.RandomState, batch: int,
+                   seq: int) -> dict:
+        """One batch as host numpy arrays.  ALL rng draws happen here,
+        in a fixed order, so fast-forwarding the stream (``skip``) lands
+        on exactly the batch an uninterrupted consumer would see."""
         cfg = self.cfg
+        toks = np.empty((batch, seq + 1), np.int64)
+        toks[:, 0] = rng.randint(0, cfg.vocab_size, batch)
+        for t in range(1, seq + 1):
+            nxt = self._perm[toks[:, t - 1]]
+            flip = rng.rand(batch) < self.noise
+            nxt = np.where(flip, rng.randint(0, cfg.vocab_size, batch), nxt)
+            toks[:, t] = nxt
+        out = {}
+        if cfg.frontend == "audio":
+            out["embeds"] = rng.randn(batch, seq, cfg.d_model) * 0.02
+            out["labels"] = toks[:, 1:]
+        elif cfg.frontend == "vision":
+            p = min(cfg.num_patch_tokens, max(seq - 2, 1))
+            out["embeds"] = rng.randn(batch, p, cfg.d_model) * 0.02
+            out["tokens"] = toks[:, : seq - p]
+        else:
+            out["tokens"] = toks[:, :seq]
+        return out
+
+    def batches(self, batch: int, seq: int, *, dtype=jnp.float32,
+                num_batches: Optional[int] = None,
+                skip: int = 0) -> Iterator[dict]:
+        """Yield device batches.  ``skip`` fast-forwards the stream past
+        that many batches first (checkpoint resume: a run continued from
+        step k must see batch k next, not batch 0 again)."""
         rng = np.random.RandomState(self.seed + 1)
+        for _ in range(max(0, int(skip))):
+            self._raw_batch(rng, batch, seq)
         i = 0
         while num_batches is None or i < num_batches:
-            toks = np.empty((batch, seq + 1), np.int64)
-            toks[:, 0] = rng.randint(0, cfg.vocab_size, batch)
-            for t in range(1, seq + 1):
-                nxt = self._perm[toks[:, t - 1]]
-                flip = rng.rand(batch) < self.noise
-                nxt = np.where(flip, rng.randint(0, cfg.vocab_size, batch), nxt)
-                toks[:, t] = nxt
-            out = {}
-            if cfg.frontend == "audio":
-                out["embeds"] = jnp.asarray(
-                    rng.randn(batch, seq, cfg.d_model) * 0.02, dtype)
-                out["labels"] = jnp.asarray(toks[:, 1:], jnp.int32)
-            elif cfg.frontend == "vision":
-                p = min(cfg.num_patch_tokens, max(seq - 2, 1))
-                out["embeds"] = jnp.asarray(
-                    rng.randn(batch, p, cfg.d_model) * 0.02, dtype)
-                out["tokens"] = jnp.asarray(toks[:, : seq - p], jnp.int32)
-            else:
-                out["tokens"] = jnp.asarray(toks[:, :seq], jnp.int32)
+            raw = self._raw_batch(rng, batch, seq)
+            out = {k: jnp.asarray(v, dtype if v.dtype.kind == "f"
+                                  else jnp.int32)
+                   for k, v in raw.items()}
             yield out
             i += 1
 
