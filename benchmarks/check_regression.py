@@ -10,6 +10,13 @@ fields are machine-dependent and ignored.  Metrics present in the fresh
 file but absent from the baseline are skipped (adding new scenarios
 never breaks the gate), but a baseline metric MISSING from the fresh
 run fails — silently dropping a scenario is a coverage regression.
+
+Two further gate shapes exist for metrics where a relative band around
+the baseline is the wrong yardstick: ABSOLUTE_MAX pins a fixed ceiling
+(error medians near zero, signed percentage deltas) and ABSOLUTE_MIN a
+fixed floor (higher-is-better reductions) — both taken straight from
+the bench's own acceptance criteria, so the gate can never drift with a
+lucky baseline.
 """
 from __future__ import annotations
 
@@ -36,7 +43,21 @@ GATED_METRICS = (
     # BENCH_e2e.json (unified execution backends): how faithful the
     # sim-predicted makespan is to the actually-executed one
     "makespan_executed_over_predicted",
+    # BENCH_profile.json (roofline strategy): the roofline-planned
+    # makespan replayed against ground truth
+    "makespan_roofline_s",
 )
+
+# fixed-ceiling gates (ISSUE 6 acceptance criteria): fresh > limit fails
+ABSOLUTE_MAX = {
+    "roofline_err_median": 0.15,
+    "makespan_roofline_delta_pct": 10.0,
+}
+
+# fixed-floor gates (higher is better): fresh < limit fails
+ABSOLUTE_MIN = {
+    "roofline_trial_reduction_x": 20.0,
+}
 
 # per-metric tolerance overrides (take precedence over --tolerance):
 # wall ratios move with runner speed (a time-capped dense wall is a
@@ -68,7 +89,9 @@ def collect(obj, prefix=""):
             path = f"{prefix}.{k}" if prefix else str(k)
             if isinstance(v, dict):
                 out.update(collect(v, path))
-            elif k in GATED_METRICS and isinstance(v, (int, float)):
+            elif isinstance(v, (int, float)) and (
+                    k in GATED_METRICS or k in ABSOLUTE_MAX
+                    or k in ABSOLUTE_MIN):
                 out[path] = (k, float(v))
     return out
 
@@ -98,12 +121,23 @@ def main() -> int:
             failures.append(path)
             continue
         _, fv = fresh[path]
-        tol = TOLERANCE_OVERRIDES.get(metric, args.tolerance)
-        limit = b * (1.0 + tol)
-        status = "FAIL" if fv > limit else "ok"
-        print(f"{status:4s} {path}: baseline={b:.4g} fresh={fv:.4g} "
-              f"(limit {limit:.4g}, tol {tol:.0%})")
-        if fv > limit:
+        if metric in ABSOLUTE_MAX:
+            limit = ABSOLUTE_MAX[metric]
+            bad = fv > limit
+            print(f"{'FAIL' if bad else 'ok':4s} {path}: fresh={fv:.4g} "
+                  f"(absolute ceiling {limit:.4g})")
+        elif metric in ABSOLUTE_MIN:
+            limit = ABSOLUTE_MIN[metric]
+            bad = fv < limit
+            print(f"{'FAIL' if bad else 'ok':4s} {path}: fresh={fv:.4g} "
+                  f"(absolute floor {limit:.4g})")
+        else:
+            tol = TOLERANCE_OVERRIDES.get(metric, args.tolerance)
+            limit = b * (1.0 + tol)
+            bad = fv > limit
+            print(f"{'FAIL' if bad else 'ok':4s} {path}: baseline={b:.4g} "
+                  f"fresh={fv:.4g} (limit {limit:.4g}, tol {tol:.0%})")
+        if bad:
             failures.append(path)
 
     if failures:

@@ -596,13 +596,14 @@ def bench_e2e(quick=False):
 # ------------------------------------------------------ performance model
 
 def bench_profile(quick=False):
-    """Trial-interpolation benchmark (paper §2's <5% profiling-overhead
+    """Profiling-strategy benchmark (paper §2's <5% profiling-overhead
     budget): exhaustive profiling of a dense GPU-count grid vs anchor
-    trials + throughput-curve interpolation.  Reports the real-trial
-    reduction, profiling wall-clock, held-out interpolation error, and
-    the end-to-end makespan delta when the Solver plans on interpolated
-    instead of exhaustive profiles.  Writes BENCH_profile.json (repo
-    root) so the trajectory accumulates across PRs."""
+    trials + throughput-curve interpolation vs the calibrated roofline
+    predictor.  Reports the real-trial reduction, profiling wall-clock,
+    held-out step-time error, and the end-to-end makespan delta when
+    the Solver plans on estimated instead of exhaustive profiles.
+    Writes BENCH_profile.json (repo root) so the trajectory accumulates
+    across PRs."""
     import math
 
     import numpy as np
@@ -650,13 +651,36 @@ def bench_profile(quick=False):
     err_p90 = float(np.percentile(errs, 90))
     err_max = float(np.max(errs))
 
-    # solver on interpolated vs exhaustive profiles; makespans compared
-    # end-to-end by replaying BOTH plans against the exhaustive
+    # roofline: 2 calibration trials fit the class coefficients, every
+    # other combo is predicted from op counts (napkin ground truth, so
+    # the predictor sees the same cost surface the "real" trials do)
+    runner_rf = TrialRunner(lib, HARDWARE["a100"])
+    t0 = time.time()
+    pm_rf = runner_rf.profile_all(jobs, counts, mode="napkin",
+                                  strategy="roofline", workers=4)
+    wall_rf = time.time() - t0
+    reduction_rf = runner_ex.trials / max(runner_rf.trials, 1)
+
+    anchored_rf = pm_rf.real_anchor_keys()
+    errs_rf = []
+    for key, p in ex.items():
+        if key in anchored_rf or not p.feasible or \
+                not math.isfinite(p.step_time_s):
+            continue
+        errs_rf.append(abs(pm_rf.step_time(*key) - p.step_time_s)
+                       / p.step_time_s)
+    rf_err_med = float(np.median(errs_rf))
+    rf_err_p90 = float(np.percentile(errs_rf, 90))
+    rf_err_max = float(np.max(errs_rf))
+
+    # solver on estimated vs exhaustive profiles; makespans compared
+    # end-to-end by replaying ALL plans against the exhaustive
     # ("ground truth") step times.  The MILPs must reach (gap-)optimality
     # — a time-limit incumbent is machine-speed-dependent and would make
     # the CI regression gate flaky — so: few slots, generous limit.
     sol_ex = solve_joint(jobs, ex, G, n_slots=10, time_limit_s=120)
     sol_in = solve_joint(jobs, pm, G, n_slots=10, time_limit_s=120)
+    sol_rf = solve_joint(jobs, pm_rf, G, n_slots=10, time_limit_s=120)
 
     class _Replay(Policy):
         dynamic = False
@@ -674,7 +698,11 @@ def bench_profile(quick=False):
     res_in = simulate(jobs, _Replay("replay-interpolated",
                                     sol_in.to_schedule()),
                       ex, cluster, noise_sigma=0.0)
+    res_rf = simulate(jobs, _Replay("replay-roofline",
+                                    sol_rf.to_schedule()),
+                      ex, cluster, noise_sigma=0.0)
     delta = res_in.makespan_s / res_ex.makespan_s - 1.0
+    delta_rf = res_rf.makespan_s / res_ex.makespan_s - 1.0
 
     out = {
         "quick": quick,
@@ -696,6 +724,18 @@ def bench_profile(quick=False):
         "makespan_exhaustive_s": res_ex.makespan_s,
         "makespan_interpolated_s": res_in.makespan_s,
         "makespan_delta_pct": 100.0 * delta,
+        "combos_roofline": runner_rf.trials,
+        "roofline_trial_reduction_x": reduction_rf,
+        "roofline_calibration_trials":
+            runner_rf.roofline_stats["calibration_trials"],
+        "roofline_escalated": runner_rf.roofline_stats["escalated"],
+        "profiling_wall_roofline_s": wall_rf,
+        "roofline_err_median": rf_err_med,
+        "roofline_err_p90": rf_err_p90,
+        "roofline_err_max": rf_err_max,
+        "solver_roofline": sol_rf.solver,
+        "makespan_roofline_s": res_rf.makespan_s,
+        "makespan_roofline_delta_pct": 100.0 * delta_rf,
     }
     emit("profile_trials", wall_in * 1e6,
          f"real={runner_in.trials} exhaustive={runner_ex.trials} "
@@ -706,15 +746,30 @@ def bench_profile(quick=False):
     emit("profile_makespan_delta", abs(delta) * 1e6,
          f"interp={res_in.makespan_s:.0f}s exhaustive="
          f"{res_ex.makespan_s:.0f}s delta={100 * delta:+.2f}%")
+    emit("profile_roofline", wall_rf * 1e6,
+         f"real={runner_rf.trials} reduction={reduction_rf:.0f}x "
+         f"err_med={rf_err_med:.3f} delta={100 * delta_rf:+.2f}%")
     # acceptance gates (ISSUE 2): >=4x fewer real trials, <=15% median
     # interpolation error, and planning on interpolated profiles costs
     # no more than 5% makespan vs exhaustive (one-sided: slot-rounding
     # luck can make the interpolated plan strictly better)
-    assert sol_ex.solver == sol_in.solver, \
-        f"asymmetric solver fallback: {sol_ex.solver} vs {sol_in.solver}"
+    assert sol_ex.solver == sol_in.solver == sol_rf.solver, \
+        f"asymmetric solver fallback: {sol_ex.solver} vs " \
+        f"{sol_in.solver} vs {sol_rf.solver}"
     assert reduction >= 4.0, f"trial reduction {reduction:.2f}x < 4x"
     assert err_med <= 0.15, f"median interp error {err_med:.3f} > 0.15"
     assert delta <= 0.05, f"makespan delta {100 * delta:.2f}% > +5%"
+    # roofline gates (ISSUE 6): >=20x fewer real trials than exhaustive,
+    # <=15% median held-out step-time error, and the solver's plan on
+    # roofline profiles costs at most 10% makespan vs the
+    # exhaustively-profiled plan (one-sided, like the interpolate gate:
+    # slot-rounding luck can make the roofline plan strictly better)
+    assert reduction_rf >= 20.0, \
+        f"roofline trial reduction {reduction_rf:.1f}x < 20x"
+    assert rf_err_med <= 0.15, \
+        f"median roofline error {rf_err_med:.3f} > 0.15"
+    assert delta_rf <= 0.10, \
+        f"roofline makespan delta {100 * delta_rf:.2f}% > +10%"
     path = os.path.join(ROOT, "BENCH_profile.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=1)

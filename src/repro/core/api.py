@@ -93,7 +93,9 @@ class SaturnSession:
     # --------------------------------------------------------- Trial Runner
     def profile(self, mode: str = "analytic",
                 strategy: str = "interpolate",
-                workers: Optional[int] = None):
+                workers: Optional[int] = None,
+                calibration_trials: int = 2,
+                confidence_threshold: float = 0.3):
         """Run the Trial Runner over the submitted workload.
 
         ``strategy="interpolate"`` (default, the paper's <5%-overhead
@@ -103,12 +105,21 @@ class SaturnSession:
         1..G — the Solver gets the dense allocation grid at the sparse
         profiling price.  ``strategy="exhaustive"`` profiles the
         geometric ladder directly and returns the legacy dict.
+        ``strategy="roofline"`` predicts every count from compiled-HLO
+        op counts, spending only ``calibration_trials`` real trials per
+        device class (none at all when the profile cache already holds
+        this class's fit); combos whose prediction confidence falls
+        below ``confidence_threshold`` escalate to real trials.
         Real trials fan out across ``workers`` threads (auto by default;
         empirical trials always run serially).
         """
         self.profiles = self.runner.profile_all(
-            self.jobs, self.gpu_counts(dense=(strategy == "interpolate")),
+            self.jobs,
+            self.gpu_counts(dense=(strategy in ("interpolate",
+                                                "roofline"))),
             mode=mode, strategy=strategy, workers=workers,
+            calibration_trials=calibration_trials,
+            confidence_threshold=confidence_threshold,
             classes=(self.cluster.device_classes if self.cluster.hetero
                      else None))
         return self.profiles

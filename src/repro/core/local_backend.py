@@ -165,7 +165,10 @@ class LocalJaxBackend(ExecutionBackend):
     # ------------------------------------------------------------- setup
     def bind(self, jobs, profiles, cluster: ClusterSpec) -> None:
         import jax
+
+        from .compile_cache import enable_persistent_compilation_cache
         super().bind(jobs, profiles, cluster)
+        enable_persistent_compilation_cache()
         self._jax_devices = list(self._devices or jax.devices())
         if cluster.total_gpus > len(self._jax_devices):
             raise RuntimeError(

@@ -287,6 +287,23 @@ class PerfModel(Mapping):
     def n_anchors(self) -> int:
         return sum(len(c.anchors) for c in self._curves.values())
 
+    def real_anchor_keys(self) -> set:
+        """Like :meth:`anchor_keys`, but only combos whose anchor came
+        from a real trial — roofline predictions and interpolated points
+        sit in ``anchors`` too (the curve serves them directly), and a
+        held-out error measurement must not score a prediction against
+        itself."""
+        predicted = ("roofline", "interpolated")
+        if self.hetero:
+            return {(c.job, c.technique, dc, g)
+                    for (_, _, dc), c in self._curves.items()
+                    for g, p in c.anchors.items()
+                    if p.source not in predicted}
+        return {(c.job, c.technique, g)
+                for c in self._curves.values()
+                for g, p in c.anchors.items()
+                if p.source not in predicted}
+
     def to_dict(self) -> Dict[Tuple, Profile]:
         """Materialize the full grid as a plain dict (legacy export)."""
         return {k: self[k] for k in self._keys}
@@ -300,7 +317,9 @@ class ObservedProfiles(Mapping):
     launches run; introspection replans plan over this view, so the
     combos actually executing carry ground truth while everything else
     keeps its estimate — the paper's introspection loop closed over
-    measured throughput.  The base is never mutated, and the overlay
+    measured throughput.  This overlay is estimator-agnostic: roofline
+    predictions (``source="roofline"``) are replaced by observations
+    exactly like empirical or analytic profiles.  The base is never mutated, and the overlay
     enumerates exactly the base's keys (same Mapping contract every
     dict-shaped consumer already holds).  ``observed`` maps the base's
     own profile keys (see :func:`profile_key`) to measured seconds.

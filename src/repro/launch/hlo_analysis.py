@@ -288,6 +288,80 @@ def analyze(hlo: str) -> Dict[str, float]:
             "n_computations": len(comps)}
 
 
+# ------------------------------------------------- roofline conversion
+#
+# Effective bytes-on-wire per device for the standard ring algorithms,
+# as a multiple of the payload bytes ``analyze()`` reports.  These map a
+# collective KIND onto the link-bandwidth term of the roofline: an
+# all-reduce of P bytes on n devices moves ~2P(n-1)/n bytes through
+# each device's interconnect, an all-gather/reduce-scatter ~P(n-1)/n,
+# a permute exactly P.  Kinds missing from this table make a combo
+# LOW-CONFIDENCE (the profiler escalates it to a real trial).
+
+KNOWN_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                     "all-to-all", "collective-permute")
+
+
+def collective_link_factor(kind: str, n_devices: int) -> Optional[float]:
+    """Bytes-on-wire multiplier for one collective kind at ``n_devices``
+    (None for kinds the ring model does not cover)."""
+    n = max(int(n_devices), 1)
+    ring = (n - 1) / n if n > 1 else 0.0
+    return {
+        "all-reduce": 2.0 * ring,
+        "all-gather": ring,
+        "reduce-scatter": ring,
+        "all-to-all": ring,
+        "collective-permute": 1.0 if n > 1 else 0.0,
+    }.get(kind.replace("-start", ""))
+
+
+def link_seconds(collectives: Dict[str, float], n_devices: int,
+                 link_bw: float) -> Tuple[float, List[str]]:
+    """Interconnect seconds for an ``analyze()`` collectives dict, plus
+    the list of UNFIT kinds (present in the HLO but absent from the
+    ring-model table) the caller should treat as low confidence."""
+    total = 0.0
+    unfit: List[str] = []
+    for kind, payload in collectives.items():
+        if kind == "total":
+            continue
+        f = collective_link_factor(kind, n_devices)
+        if f is None:
+            unfit.append(kind)
+            total += payload / max(link_bw, 1e-9)   # conservative: 1x
+        else:
+            total += payload * f / max(link_bw, 1e-9)
+    return total, unfit
+
+
+def scale_analysis(analysis: Dict[str, float], n_from: int, n_to: int,
+                   *, work_scales: bool = True) -> Dict[str, float]:
+    """Rescale an ``analyze()`` result from a mesh over ``n_from``
+    devices to ``n_to`` devices WITHOUT recompiling.
+
+    The compiled module is SPMD — ``analyze()`` counts one device's
+    program — so where shapes permit (the sharded axis divides evenly,
+    which every registered technique guarantees inside its
+    ``search_space``), per-device FLOPs and HBM traffic scale as
+    ``n_from/n_to`` (the same global work divided over more devices)
+    while each collective's PAYLOAD per device stays constant (grad
+    all-reduce moves the full gradient, FSDP gathers the full params,
+    TP reduces the full activations — none depend on the ring size; the
+    ring-size dependence lives in :func:`collective_link_factor`).
+    ``work_scales=False`` keeps per-device work constant instead (e.g.
+    a technique that replicates rather than shards the batch).
+    """
+    s = (n_from / n_to) if work_scales else 1.0
+    out = dict(analysis)
+    out["flops"] = analysis["flops"] * s
+    out["bytes_written"] = analysis["bytes_written"] * s
+    out["collectives"] = dict(analysis.get("collectives", {"total": 0.0}))
+    out["scaled_from"] = float(n_from)
+    out["scaled_to"] = float(n_to)
+    return out
+
+
 def top_writers(hlo: str, k: int = 15):
     """Profile helper: top-k (op, computation, bytes x multiplier) HBM
     writers — the 'where is the memory term coming from' view."""

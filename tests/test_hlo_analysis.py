@@ -1,10 +1,15 @@
 """Loop-aware HLO analyzer: the roofline instrument must be exact on
 known workloads (scan trip counts, nested loops, in-place DUS)."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.launch.hlo_analysis import analyze
+from repro.launch.hlo_analysis import (analyze, collective_link_factor,
+                                       computation_multipliers,
+                                       link_seconds, parse_computations,
+                                       scale_analysis)
 
 
 def _compile(f, *specs):
@@ -82,3 +87,169 @@ ENTRY %main (p: f32[8]) -> f32[8] {
 """
     r = analyze(hlo)
     assert r["collectives"].get("all-reduce") == 32.0
+
+
+# ------------------------------------------------ hand-written HLO edges
+
+_WHILE_HLO = """
+%cond (c: (s32[], f32[16])) -> pred[] {
+  %c = (s32[], f32[16]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%c), index=0
+  %k = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+%body (b: (s32[], f32[16])) -> (s32[], f32[16]) {
+  %b = (s32[], f32[16]{0}) parameter(0)
+  %i2 = s32[] get-tuple-element(%b), index=0
+  %v = f32[16]{0} get-tuple-element(%b), index=1
+  %one = s32[] constant(1)
+  %i3 = s32[] add(%i2, %one)
+  %v2 = f32[16]{0} multiply(%v, %v)
+  ROOT %t = (s32[], f32[16]{0}) tuple(%i3, %v2)
+}
+
+ENTRY %main (p: f32[16]) -> f32[16] {
+  %p = f32[16]{0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[16]{0}) tuple(%z, %p)
+  %w = (s32[], f32[16]{0}) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[16]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_from_condition_constant():
+    """The loop bound lives in the CONDITION computation's integer
+    constant — body instructions must be multiplied by it."""
+    comps = parse_computations(_WHILE_HLO)
+    mult = computation_multipliers(comps)
+    assert mult["body"] == (7.0, 7.0)
+    assert mult["main"] == (1.0, 1.0)
+    r = analyze(_WHILE_HLO)
+    # body writes one f32[16] multiply per trip (64 B x 7); the add on
+    # the s32 counter adds 4 B x 7
+    assert r["bytes_written"] >= 7 * 64
+
+
+def test_dus_effective_write_bytes_bare_instruction():
+    hlo = """
+ENTRY %main (buf: f32[256,64], v: f32[1,64]) -> f32[256,64] {
+  %buf = f32[256,64]{1,0} parameter(0)
+  %v = f32[1,64]{1,0} parameter(1)
+  %z = s32[] constant(0)
+  ROOT %d = f32[256,64]{1,0} dynamic-update-slice(%buf, %v, %z, %z)
+}
+"""
+    r = analyze(hlo)
+    # in-place: only the (1, 64) update slice hits HBM, not the
+    # (256, 64) buffer
+    assert r["bytes_written"] == 1 * 64 * 4
+
+
+def test_fusion_multiplier_flops_but_no_bytes():
+    """A fusion callee inherits the caller's FLOPs multiplier but its
+    instruction outputs stay in registers — zero bytes multiplier; the
+    fusion's own output is the only HBM write."""
+    hlo = """
+%fused (a: f32[32,32], b: f32[32,32]) -> f32[32,32] {
+  %a = f32[32,32]{1,0} parameter(0)
+  %b = f32[32,32]{1,0} parameter(1)
+  %d = f32[32,32]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = f32[32,32]{1,0} tanh(%d)
+}
+
+ENTRY %main (x: f32[32,32]) -> f32[32,32] {
+  %x = f32[32,32]{1,0} parameter(0)
+  ROOT %f = f32[32,32]{1,0} fusion(%x, %x), kind=kOutput, calls=%fused
+}
+"""
+    comps = parse_computations(hlo)
+    mult = computation_multipliers(comps)
+    assert mult["fused"] == (1.0, 0.0)
+    r = analyze(hlo)
+    assert r["flops"] == 2 * 32 ** 3          # the fused dot still counts
+    assert r["bytes_written"] == 32 * 32 * 4  # only the fusion output
+
+
+def test_unknown_collective_kind_is_unfit():
+    secs, unfit = link_seconds({"ragged-all-to-all": 1e6, "total": 1e6},
+                               8, 1e9)
+    assert unfit == ["ragged-all-to-all"]
+    assert secs > 0      # still charged conservatively at 1x
+
+
+def test_link_factor_units():
+    assert collective_link_factor("all-reduce", 4) == 2.0 * 3 / 4
+    assert collective_link_factor("all-gather", 4) == 3 / 4
+    assert collective_link_factor("reduce-scatter", 8) == 7 / 8
+    assert collective_link_factor("collective-permute", 8) == 1.0
+    assert collective_link_factor("all-reduce", 1) == 0.0
+    assert collective_link_factor("all-reduce-start", 4) == \
+        collective_link_factor("all-reduce", 4)
+    assert collective_link_factor("ragged-all-to-all", 4) is None
+
+
+def test_scale_analysis_work_and_payload():
+    a = {"flops": 8e9, "bytes_written": 4e9,
+         "collectives": {"all-reduce": 1e6, "total": 1e6}}
+    s = scale_analysis(a, 2, 8)
+    assert s["flops"] == 2e9                  # same work over 4x devices
+    assert s["bytes_written"] == 1e9
+    assert s["collectives"]["all-reduce"] == 1e6   # payload constant
+    assert (s["scaled_from"], s["scaled_to"]) == (2.0, 8.0)
+    f = scale_analysis(a, 2, 8, work_scales=False)
+    assert f["flops"] == 8e9
+
+
+# ------------------------------------------------------ golden transformer
+
+_GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                       "golden_transformer_step.hlo.txt")
+# analyze() of the committed HLO text; FLOPs are exactly fwd+bwd of the
+# L=4-layer scan (3 x L x 2 x 2*B*S*D*F with B*S=64, D=64, F=128)
+_GOLDEN_FLOPS = 25165824.0
+_GOLDEN_BYTES = 3244144.0
+_GOLDEN_N_COMPS = 22
+
+
+def test_golden_file_parser_pinned():
+    """The committed HLO text must analyze to the recorded op counts
+    EXACTLY — any parser regression (instruction regex, multiplier
+    propagation, DUS handling) fails here first."""
+    r = analyze(open(_GOLDEN).read())
+    assert r["flops"] == _GOLDEN_FLOPS
+    assert r["bytes_written"] == _GOLDEN_BYTES
+    assert r["n_computations"] == _GOLDEN_N_COMPS
+    assert r["collectives"]["total"] == 0
+
+
+def test_golden_recompile_matches_committed_analysis():
+    """Recompiling the same step TODAY must analyze to the same FLOPs:
+    if XLA's HLO text format drifts in a way the parser cannot read,
+    this fails loudly instead of silently under-counting."""
+    L, D, F, S, B = 4, 64, 128, 32, 2
+
+    def loss(params, x):
+        def layer(h, p):
+            w1, w2 = p
+            h = jnp.tanh(h @ w1) @ w2
+            return h, None
+        h, _ = jax.lax.scan(layer, x, params)
+        return (h ** 2).mean()
+
+    def train_step(params, x):
+        g = jax.grad(loss)(params, x)
+        return jax.tree_util.tree_map(lambda p, gg: p - 0.1 * gg,
+                                      params, g)
+
+    params = (jax.ShapeDtypeStruct((L, D, F), jnp.float32),
+              jax.ShapeDtypeStruct((L, F, D), jnp.float32))
+    x = jax.ShapeDtypeStruct((B * S, D), jnp.float32)
+    txt = jax.jit(train_step).lower(params, x).compile().as_text()
+    r = analyze(txt)
+    np.testing.assert_allclose(r["flops"], _GOLDEN_FLOPS, rtol=0.02)
+    # bytes depend on fusion decisions and may move a little across
+    # XLA versions, but an order-of-magnitude jump means the DUS /
+    # fusion write logic no longer understands the text
+    assert 0.3 * _GOLDEN_BYTES < r["bytes_written"] < 3 * _GOLDEN_BYTES

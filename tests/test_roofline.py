@@ -1,0 +1,225 @@
+"""Roofline profiling strategy: calibrated predictions must honour
+every contract the real-trial strategies already hold (PerfModel keys,
+class-qualified Profiles, cache versioning, ObservedProfiles overlay)
+while spending only the calibration trials."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.job import DeviceClass, Job
+from repro.core.library import ParallelismLibrary
+from repro.core.perfmodel import ObservedProfiles, PerfModel
+from repro.core.profiler import (CACHE_VERSION, HARDWARE, PROFILE_STRATEGIES,
+                                 ClassCalibration, TrialRunner,
+                                 fit_calibration)
+
+CFG = get_config("xlstm-125m")
+
+
+def _jobs(n=2):
+    return [Job(name=f"j{i}", cfg=CFG, batch_size=16 * (i + 1),
+                seq_len=512, total_steps=100, lr=1e-4, seed=i)
+            for i in range(n)]
+
+
+def _runner(**kw):
+    return TrialRunner(ParallelismLibrary(), HARDWARE["a100"], **kw)
+
+
+COUNTS = list(range(1, 17))
+
+
+def test_roofline_returns_perfmodel_with_full_coverage():
+    r = _runner()
+    pm = r.profile_all(_jobs(), COUNTS, mode="napkin", strategy="roofline")
+    assert isinstance(pm, PerfModel)
+    ex = _runner().profile_all(_jobs(), COUNTS, mode="napkin",
+                               strategy="exhaustive")
+    assert set(pm) == set(ex)
+    for key, p in ex.items():
+        pr = pm[key]
+        assert pr.feasible == p.feasible
+        assert pr.n_devices == p.n_devices
+        assert pr.device_class == p.device_class
+
+
+def test_roofline_spends_only_calibration_trials():
+    r = _runner()
+    r.profile_all(_jobs(), COUNTS, mode="napkin", strategy="roofline",
+                  calibration_trials=2)
+    assert r.trials == 2 + r.roofline_stats["escalated"]
+    assert r.roofline_stats["calibration_trials"] == 2
+    assert r.roofline_stats["predicted"] > 20 * r.trials
+
+
+def test_roofline_prediction_accuracy_vs_exhaustive():
+    r = _runner()
+    pm = r.profile_all(_jobs(), COUNTS, mode="napkin", strategy="roofline")
+    ex = _runner().profile_all(_jobs(), COUNTS, mode="napkin",
+                               strategy="exhaustive")
+    errs = [abs(pm[k].step_time_s - p.step_time_s) / p.step_time_s
+            for k, p in ex.items()
+            if p.feasible and math.isfinite(p.step_time_s)]
+    assert float(np.median(errs)) <= 0.15
+
+
+def test_roofline_profiles_are_marked_and_real_anchors_tracked():
+    r = _runner()
+    pm = r.profile_all(_jobs(), COUNTS, mode="napkin", strategy="roofline")
+    sources = {pm[k].source for k in pm}
+    assert "roofline" in sources
+    real = pm.real_anchor_keys()
+    # exactly the calibration (and escalation) trials are real anchors
+    assert len(real) == r.trials
+    for key in real:
+        assert pm[key].source != "roofline"
+    predicted = [k for k in pm if pm[k].source == "roofline"]
+    assert predicted and all(
+        0.0 <= pm[k].terms["confidence"] <= 1.0 for k in predicted)
+
+
+def test_confidence_threshold_one_escalates_everything():
+    r = _runner()
+    jobs = _jobs(1)
+    r.profile_all(jobs, [1, 2, 4], mode="napkin", strategy="roofline",
+                  confidence_threshold=1.1)
+    assert r.roofline_stats["predicted"] == 0
+    ex = _runner().profile_all(jobs, [1, 2, 4], mode="napkin",
+                               strategy="exhaustive")
+    assert r.trials == len(ex)
+
+
+def test_roofline_hetero_keys_and_per_class_calibration():
+    classes = [DeviceClass("a100", nodes=1, gpus_per_node=8),
+               DeviceClass("v100", nodes=1, gpus_per_node=8,
+                           hbm_per_gpu=16e9, speed_hint=0.5)]
+    r = _runner()
+    pm = r.profile_all(_jobs(1), list(range(1, 9)), mode="napkin",
+                       strategy="roofline", classes=classes)
+    key = next(iter(pm))
+    assert len(key) == 4 and key[2] in ("a100", "v100")
+    assert set(r.calibration) == {"a100", "v100"}
+    # the slower class must predict slower steps at the same combo
+    fast = pm[("j0", "ddp", "a100", 4)]
+    slow = pm[("j0", "ddp", "v100", 4)]
+    assert slow.step_time_s > fast.step_time_s
+
+
+def test_calibration_persists_and_skips_trials_on_reload(tmp_path):
+    path = str(tmp_path / "profiles.json")
+    r1 = _runner(cache_path=path)
+    r1.profile_all(_jobs(1), COUNTS, mode="napkin", strategy="roofline")
+    assert r1.trials > 0
+    data = json.loads(open(path).read())
+    assert data["version"] == CACHE_VERSION
+    assert "default" in data["calibration"]
+    # a fresh runner loads the fit AND the cached real profiles: zero
+    # new trials on a different workload of the same class
+    r2 = _runner(cache_path=path)
+    assert "default" in r2.calibration
+    jobs2 = [Job(name="other", cfg=CFG, batch_size=8, seq_len=256,
+                 total_steps=50, lr=1e-3, seed=9)]
+    r2.profile_all(jobs2, COUNTS, mode="napkin", strategy="roofline")
+    assert r2.trials == r2.roofline_stats["escalated"]
+    assert r2.roofline_stats["calibration_trials"] == 0
+
+
+def test_old_cache_version_discarded(tmp_path):
+    path = str(tmp_path / "profiles.json")
+    with open(path, "w") as f:
+        json.dump({"version": CACHE_VERSION - 1, "profiles": [
+            {"job": "j0", "technique": "ddp", "n_devices": 1,
+             "step_time_s": 1.0, "mem_per_device": 1.0, "feasible": True,
+             "source": "napkin"}],
+            "calibration": {"default": {
+                "device_class": "default", "coef": [1, 1, 1],
+                "n_points": 2, "residual": 0.0, "mode": "napkin"}}}, f)
+    r = _runner(cache_path=path)
+    assert not r._cache and not r.calibration
+
+
+def test_calibration_roundtrip_json():
+    c = ClassCalibration("a100", (0.9, 1.1, 1.0), 3, 0.05, "napkin")
+    c2 = ClassCalibration.from_json(c.to_json())
+    assert c2 == c
+    assert c2.predict((1.0, 0.0, 0.0)) == pytest.approx(0.9)
+
+
+def test_fit_calibration_scalar_and_lstsq():
+    # 2 points -> scalar fit recovers a global efficiency factor
+    pts = [((1.0, 0.5, 0.1), 0.8 * 1.6), ((2.0, 1.0, 0.2), 0.8 * 3.2)]
+    c = fit_calibration("default", pts, "napkin")
+    assert c.coef[0] == pytest.approx(0.8, rel=1e-6)
+    assert c.residual < 1e-9
+    # >=4 points -> full least squares recovers distinct coefficients
+    rng = np.random.default_rng(0)
+    true = np.array([0.7, 1.3, 2.0])
+    feats = rng.uniform(0.1, 2.0, size=(8, 3))
+    pts = [(tuple(f), float(f @ true)) for f in feats]
+    c = fit_calibration("default", pts, "napkin")
+    np.testing.assert_allclose(c.coef, true, rtol=1e-6)
+
+
+def test_observed_overlay_overrides_roofline():
+    pm = _runner().profile_all(_jobs(1), COUNTS, mode="napkin",
+                               strategy="roofline")
+    key = next(k for k in pm if pm[k].source == "roofline")
+    obs = ObservedProfiles(pm, {key: 123.0})
+    assert obs[key].step_time_s == 123.0
+    assert obs[key].source == "observed"
+    other = next(k for k in pm if k != key)
+    assert obs[other] == pm[other]
+
+
+def test_unknown_strategy_names_all_strategies():
+    with pytest.raises(ValueError) as e:
+        _runner().profile_all(_jobs(1), [1, 2], strategy="nope")
+    for s in PROFILE_STRATEGIES:
+        assert s in str(e.value)
+
+
+def test_unknown_device_class_raises():
+    with pytest.raises(ValueError, match="unknown device class"):
+        _runner()._class_hw("h900")
+
+
+def test_roofline_analytic_mode_uses_compiled_hlo():
+    """With a real (reduced) model the features must come from actual
+    lowered HLO, not the napkin closed form."""
+    cfg = CFG.reduced()
+    job = Job(name="tiny", cfg=cfg, batch_size=4, seq_len=32,
+              total_steps=10, lr=1e-4, seed=0)
+    r = _runner()
+    pm = r.profile_all([job], [1, 2], mode="analytic",
+                       strategy="roofline", calibration_trials=1,
+                       confidence_threshold=0.0)
+    preds = [pm[k] for k in pm if pm[k].source == "roofline"]
+    assert preds, "expected at least one roofline prediction"
+    # techniques hostable at n=1 scale from a real n=1 compile; the
+    # rest (fsdp/tp need n>=2, beyond this 1-device pool) legitimately
+    # fall back to closed-form terms
+    hlo_backed = [p for p in preds
+                  if p.technique in ("ddp", "remat-offload")]
+    assert hlo_backed
+    assert all(p.terms.get("hlo_base_n") == 1.0 for p in hlo_backed)
+    assert all(p.step_time_s > 0 and math.isfinite(p.step_time_s)
+               for p in preds)
+
+
+def test_compile_memoized_across_counts():
+    """One lowering per (job-shape, technique, mesh): profiling the same
+    combo twice must not grow the compile cache."""
+    cfg = CFG.reduced()
+    job = Job(name="tiny", cfg=cfg, batch_size=4, seq_len=32,
+              total_steps=10, lr=1e-4, seed=0)
+    r = _runner()
+    r.profile_all([job], [1], mode="analytic", strategy="roofline",
+                  confidence_threshold=0.0)
+    n = len(r._compile_cache)
+    assert n >= 1
+    r.profile_all([job], [1], mode="analytic", strategy="roofline",
+                  confidence_threshold=0.0)
+    assert len(r._compile_cache) == n
