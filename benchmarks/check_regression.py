@@ -6,10 +6,14 @@ against the committed baseline and fail on makespan regressions.
         --fresh BENCH_schedule.json [--tolerance 0.10]
 
 Only *makespan-like* metrics are gated (lower is better); wall-clock
-fields are machine-dependent and ignored.  Metrics present in the fresh
-file but absent from the baseline are skipped (adding new scenarios
-never breaks the gate), but a baseline metric MISSING from the fresh
-run fails — silently dropping a scenario is a coverage regression.
+fields are machine-dependent and ignored.  Relative metrics present in
+the fresh file but absent from the baseline are skipped (adding new
+scenarios never breaks the gate), but a baseline metric MISSING from
+the fresh run fails — silently dropping a scenario is a coverage
+regression.  Absolute-limit metrics (ABSOLUTE_MAX / ABSOLUTE_MIN) are
+checked on EVERY fresh path, baseline-present or not: a fixed ceiling
+taken from a bench's acceptance criteria must not be evadable by being
+new.
 
 Two further gate shapes exist for metrics where a relative band around
 the baseline is the wrong yardstick: ABSOLUTE_MAX pins a fixed ceiling
@@ -137,6 +141,25 @@ def main() -> int:
             bad = fv > limit
             print(f"{'FAIL' if bad else 'ok':4s} {path}: baseline={b:.4g} "
                   f"fresh={fv:.4g} (limit {limit:.4g}, tol {tol:.0%})")
+        if bad:
+            failures.append(path)
+
+    # absolute gates are acceptance criteria, not baseline comparisons:
+    # apply them to fresh-only paths too (a new scenario must not dodge
+    # its fixed ceiling/floor just because the baseline predates it)
+    for path, (metric, fv) in sorted(fresh.items()):
+        if path in base:
+            continue
+        if metric in ABSOLUTE_MAX:
+            limit, bad = ABSOLUTE_MAX[metric], fv > ABSOLUTE_MAX[metric]
+            print(f"{'FAIL' if bad else 'ok':4s} {path}: fresh={fv:.4g} "
+                  f"(absolute ceiling {limit:.4g}, no baseline)")
+        elif metric in ABSOLUTE_MIN:
+            limit, bad = ABSOLUTE_MIN[metric], fv < ABSOLUTE_MIN[metric]
+            print(f"{'FAIL' if bad else 'ok':4s} {path}: fresh={fv:.4g} "
+                  f"(absolute floor {limit:.4g}, no baseline)")
+        else:
+            continue
         if bad:
             failures.append(path)
 

@@ -5,8 +5,12 @@ Layering (each layer only imports downward):
 
     schedule.py      Schedule IR: Placement / ScheduleEntry / Schedule, the
                      Policy interface all planners implement
-    events.py        event types + queue (arrival, completion, restart, tick)
+    events.py        event types + queue (arrival, completion, restart,
+                     cluster events, tick)
+    chaos.py         fault injection: ChaosTrace + typed cluster events
+                     (failures, spot churn, resizes) + seeded generators
     placement.py     pluggable device assignment: FlatPool | NodeAware
+                     (elastic pools grow/shrink under cluster events)
     runtime.py       ClusterState + the backend-agnostic discrete-event
                      engine; the ExecutionBackend protocol + SimBackend
     local_backend.py LocalJaxBackend: the same Schedule IR really trains
@@ -22,6 +26,10 @@ Layering (each layer only imports downward):
     api.py           SaturnSession facade (run(backend="sim"|"local"))
 """
 from .api import SaturnSession                              # noqa: F401
+from .chaos import (CapacityChange, ChaosTrace,             # noqa: F401
+                    NodeFailure, NodeRecovery, SpotGrant, SpotRevoke,
+                    merge_events, poisson_node_failures,
+                    spot_capacity_trace)
 from .job import ClusterSpec, DeviceClass, Job, hpo_grid    # noqa: F401
 from .perfmodel import (ObservedProfiles, PerfModel,        # noqa: F401
                         ThroughputCurve, select_anchor_counts)

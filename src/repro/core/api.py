@@ -134,8 +134,10 @@ class SaturnSession:
             mip_gap: Optional[float] = None,
             refine: Optional[bool] = None,
             incremental: Optional[bool] = None,
+            objective: Optional[str] = None,
             backend: str = "sim",
-            ckpt_dir: Optional[str] = None) -> SimResult:
+            ckpt_dir: Optional[str] = None,
+            chaos=None) -> SimResult:
         """Solve + execute on the cluster runtime.
 
         ``backend`` selects the execution substrate the one Schedule IR
@@ -150,16 +152,26 @@ class SaturnSession:
         ``placement`` overrides ``cluster.placement`` for this run.
 
         The solver knobs (``n_slots``, ``time_limit_s``, ``mip_gap``,
-        ``refine``, ``incremental``) configure the default
-        :class:`SaturnPolicy` this call constructs; passing them
+        ``refine``, ``incremental``, ``objective``) configure the
+        default :class:`SaturnPolicy` this call constructs; passing them
         together with an explicit ``policy`` is an error — configure
         the policy directly instead of having knobs silently ignored.
+        ``objective`` selects what the MILP minimizes ("makespan",
+        "weighted_completion", "tardiness" or "fair_share" — see
+        ``repro.core.solver.OBJECTIVES``).
+
+        ``chaos`` injects a :class:`~repro.core.chaos.ChaosTrace` —
+        seeded node failures, spot revocations/grants and capacity
+        resizes — into the run; killed launches salvage their last
+        periodic checkpoint and dynamic policies replan on the new
+        capacity.
         """
         knobs = {k: v for k, v in (("n_slots", n_slots),
                                    ("time_limit_s", time_limit_s),
                                    ("mip_gap", mip_gap),
                                    ("refine", refine),
-                                   ("incremental", incremental))
+                                   ("incremental", incremental),
+                                   ("objective", objective))
                  if v is not None}
         if policy is not None and knobs:
             raise ValueError(
@@ -186,4 +198,4 @@ class SaturnSession:
                         introspect_every_s=introspect_every_s
                         if policy.dynamic else None,
                         noise_sigma=noise_sigma,
-                        exec_backend=exec_backend)
+                        exec_backend=exec_backend, chaos=chaos)

@@ -18,15 +18,15 @@ the historical behavior.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Tuple
 
 import numpy as np
 
-from .job import Job
 from .perfmodel import iter_job_class_profiles, iter_job_profiles
 from .schedule import Policy, Schedule, ScheduleEntry
-from .solver import (class_choice_map, pooled_choice_map, solve_joint,
-                     solve_joint_classes, solve_joint_nodes,
+from .solver import (OBJECTIVES, class_choice_map, pooled_choice_map,
+                     solve_joint, solve_joint_classes, solve_joint_nodes,
                      solve_residual, split_fixed_running)
 
 
@@ -350,6 +350,11 @@ class SaturnPolicy(Policy):
     MILP, and only the residual (waiting jobs + remaining work) is
     re-solved.  The node-aware MILP has no incremental path and replans
     from scratch.
+
+    ``objective`` picks what the MILP minimizes (``OBJECTIVES`` in
+    :mod:`repro.core.solver`): the paper's makespan (default), weighted
+    completion time, deadline tardiness, or per-tenant fair share.  The
+    node-aware MILP supports only makespan.
     """
 
     name = "saturn"
@@ -358,19 +363,35 @@ class SaturnPolicy(Policy):
 
     def __init__(self, n_slots: int = 24, time_limit_s: float = 10.0, *,
                  mip_gap: float = 0.05, refine: bool = False,
-                 incremental: bool = True):
+                 incremental: bool = True, objective: str = "makespan"):
+        if objective not in OBJECTIVES:
+            raise ValueError(f"unknown objective {objective!r}; "
+                             f"expected one of {OBJECTIVES}")
         self.n_slots = n_slots
         self.time_limit_s = time_limit_s
         self.mip_gap = mip_gap
         self.refine = refine
         self.incremental = incremental
+        self.objective = objective
         self._last_plan_t = 0.0
 
     @staticmethod
-    def _live(jobs, remaining):
-        return [Job(j.name, j.cfg, j.batch_size, j.seq_len,
-                    remaining.get(j.name, j.total_steps), j.lr, j.seed)
-                for j in jobs if remaining.get(j.name, j.total_steps) > 0]
+    def _live(jobs, remaining, now_s: float = 0.0):
+        """Remaining-work copies of unfinished jobs.  The solver plans
+        from t=0 = "now", so absolute deadlines shift by ``now_s`` (a
+        deadline already blown clamps to 0: all further delay is
+        tardiness)."""
+        out = []
+        for j in jobs:
+            rem = remaining.get(j.name, j.total_steps)
+            if rem <= 0:
+                continue
+            dl = getattr(j, "deadline_s", None)
+            if dl is not None and now_s:
+                dl = max(0.0, dl - now_s)
+            out.append(dataclasses.replace(j, total_steps=rem,
+                                           deadline_s=dl))
+        return out
 
     def _choice_map(self, live, profiles, cluster):
         """Per-job choice lists, class-qualified on heterogeneous
@@ -382,16 +403,21 @@ class SaturnPolicy(Policy):
         return (pooled_choice_map(live, profiles),
                 {None: int(cluster.total_gpus)})
 
-    def plan(self, jobs, remaining, profiles, cluster, current):
-        live = self._live(jobs, remaining)
+    def plan(self, jobs, remaining, profiles, cluster, current,
+             now_s: float = 0.0):
+        live = self._live(jobs, remaining, now_s)
         if not live:
             return Schedule([], solver=self.name)
         if _is_hetero(cluster):
             sol = solve_joint_classes(
                 live, profiles, cluster, n_slots=min(self.n_slots, 20),
                 time_limit_s=self.time_limit_s, mip_gap=self.mip_gap,
-                refine=self.refine)
+                refine=self.refine, objective=self.objective)
         elif getattr(cluster, "placement", "flat") == "node":
+            if self.objective != "makespan":
+                raise ValueError(
+                    "the node-aware MILP supports only the makespan "
+                    f"objective (got {self.objective!r})")
             sol = solve_joint_nodes(
                 live, profiles, cluster.nodes, cluster.gpus_per_node,
                 n_slots=min(self.n_slots, 16),
@@ -400,7 +426,8 @@ class SaturnPolicy(Policy):
             sol = solve_joint(live, profiles, cluster.total_gpus,
                               n_slots=self.n_slots,
                               time_limit_s=self.time_limit_s,
-                              mip_gap=self.mip_gap, refine=self.refine)
+                              mip_gap=self.mip_gap, refine=self.refine,
+                              objective=self.objective)
         return sol.to_schedule()
 
     def plan_incremental(self, jobs, remaining, profiles, cluster,
@@ -416,8 +443,14 @@ class SaturnPolicy(Policy):
         if not self.incremental or not running or prev is None \
                 or not len(prev) \
                 or getattr(cluster, "placement", "flat") == "node":
+            # ``now_s`` (for deadline shifting) is SaturnPolicy.plan's
+            # extension; subclasses overriding ``plan`` keep the base
+            # Policy signature and manage their own world view
+            if type(self).plan is SaturnPolicy.plan:
+                return self.plan(jobs, remaining, profiles, cluster,
+                                 current, now_s=now_s)
             return self.plan(jobs, remaining, profiles, cluster, current)
-        live = self._live(jobs, remaining)
+        live = self._live(jobs, remaining, now_s)
         if not live:
             return Schedule([], solver=self.name)
         choice_map, budgets = self._choice_map(live, profiles, cluster)
@@ -426,7 +459,8 @@ class SaturnPolicy(Policy):
             cluster.restart_cost_s)
         if not residual:
             # every running job keeps its config; nothing to re-solve
-            sol = solve_residual([], choice_map, budgets, fixed)
+            sol = solve_residual([], choice_map, budgets, fixed,
+                                 objective=self.objective)
             return sol.to_schedule()
         # warm incumbent: the previous plan's starts, shifted to now
         residual_names = {j.name for j in residual}
@@ -438,7 +472,7 @@ class SaturnPolicy(Policy):
         sol = solve_residual(
             residual, choice_map, budgets, fixed, n_slots=n_slots,
             time_limit_s=self.time_limit_s, mip_gap=self.mip_gap,
-            warm_starts=warm or None)
+            warm_starts=warm or None, objective=self.objective)
         return sol.to_schedule()
 
 

@@ -1,0 +1,194 @@
+"""Fault injection and elasticity: typed cluster events + seeded
+generators (ROADMAP item 5).
+
+A :class:`ChaosTrace` is an ordered sequence of concrete
+:class:`~repro.core.events.ClusterEvent` subtypes the runtime injects
+through its :class:`~repro.core.events.EventQueue`:
+
+- :class:`NodeFailure` — ``n_gpus`` devices of a class die, busy or not
+  (lowest present ids).  Launches on dead devices are killed and salvage
+  their last periodic checkpoint: progress since
+  ``ChaosTrace.checkpoint_every_s`` is lost, NOT the whole launch.  An
+  optional ``recover_after_s`` schedules the matching
+  :class:`NodeRecovery` automatically.
+- :class:`NodeRecovery` / :class:`SpotGrant` — capacity returns / a spot
+  grant lands: the placement pool grows by ``n_gpus`` FRESH device ids
+  (ids are never reused, so Gantt history and conservation accounting
+  stay unambiguous).
+- :class:`SpotRevoke` — the provider reclaims ``n_gpus`` spot devices.
+  Unlike a failure, revocation is polite: free devices go first, busy
+  ones only when the free pool cannot cover the revocation (victims
+  still salvage their checkpoints).
+- :class:`CapacityChange` — signed administrative resize: ``delta > 0``
+  grows the pool, ``delta < 0`` shrinks it (free-first, like a revoke).
+
+All events are count-based, not id-based: which concrete devices die is
+resolved by the runtime at processing time against the devices actually
+present then — so a trace composed of independent generators stays valid
+no matter how the pool has grown or shrunk in between.
+
+The generators are seeded and deterministic.  Failure sweeps use Poisson
+THINNING: :func:`poisson_node_failures` draws the event stream once at
+``max_rate_per_hour`` and keeps each event with probability
+``rate / max_rate`` using per-event uniform marks — so the failures at a
+higher rate are a strict superset of those at a lower rate (same seed),
+which is what makes "Saturn's margin widens with churn" a monotone,
+gateable claim rather than seed noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import List, Optional, Sequence, Tuple
+
+from .events import ClusterEvent
+from .job import DEFAULT_CLASS
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeFailure(ClusterEvent):
+    """``n_gpus`` devices of ``device_class`` fail hard (busy included:
+    lowest present ids die).  ``recover_after_s`` schedules the matching
+    :class:`NodeRecovery` for however many devices actually died."""
+    n_gpus: int = 1
+    device_class: str = DEFAULT_CLASS
+    recover_after_s: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeRecovery(ClusterEvent):
+    n_gpus: int = 1
+    device_class: str = DEFAULT_CLASS
+
+
+@dataclasses.dataclass(frozen=True)
+class SpotGrant(ClusterEvent):
+    n_gpus: int = 1
+    device_class: str = DEFAULT_CLASS
+
+
+@dataclasses.dataclass(frozen=True)
+class SpotRevoke(ClusterEvent):
+    """Free devices are reclaimed first; busy ones only if the free pool
+    cannot cover the revocation."""
+    n_gpus: int = 1
+    device_class: str = DEFAULT_CLASS
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityChange(ClusterEvent):
+    """Administrative resize: ``delta > 0`` adds fresh devices,
+    ``delta < 0`` removes (free-first)."""
+    delta: int = 0
+    device_class: str = DEFAULT_CLASS
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosTrace:
+    """A seeded scenario: cluster events + the checkpoint cadence that
+    governs how much progress a killed launch salvages.
+
+    ``checkpoint_every_s`` is the periodic-checkpoint interval measured
+    from each launch's start; a launch killed at ``t`` resumes from
+    ``start + floor((t - start) / interval) * interval``.  The launch
+    start itself always counts as a checkpoint, so a failure never
+    erases progress from before the launch."""
+    events: Tuple[ClusterEvent, ...] = ()
+    checkpoint_every_s: float = 600.0
+    name: str = "chaos"
+
+    def __post_init__(self):
+        if self.checkpoint_every_s <= 0:
+            raise ValueError("checkpoint_every_s must be positive")
+        for e in self.events:
+            if not isinstance(e, ClusterEvent):
+                raise TypeError(f"not a ClusterEvent: {e!r}")
+            if e.t < 0:
+                raise ValueError(f"event before t=0: {e!r}")
+        object.__setattr__(
+            self, "events",
+            tuple(sorted(self.events, key=lambda e: e.t)))
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+
+def poisson_node_failures(rate_per_hour: float, horizon_s: float, *,
+                          seed: int = 0,
+                          device_class: str = DEFAULT_CLASS,
+                          n_gpus: int = 1,
+                          recover_after_s: Optional[float] = None,
+                          max_rate_per_hour: Optional[float] = None
+                          ) -> Tuple[NodeFailure, ...]:
+    """Seeded Poisson failure arrivals over ``[0, horizon_s)``.
+
+    With ``max_rate_per_hour`` set, the stream is generated ONCE at the
+    max rate and thinned: an event survives iff its uniform mark is
+    below ``rate / max_rate``.  Sweeping ``rate_per_hour`` under a fixed
+    ``max_rate_per_hour`` and seed therefore yields nested traces —
+    every failure at rate r also occurs at every rate r' > r.
+    """
+    if rate_per_hour < 0:
+        raise ValueError("rate_per_hour must be >= 0")
+    max_rate = max_rate_per_hour if max_rate_per_hour is not None \
+        else rate_per_hour
+    if rate_per_hour > max_rate:
+        raise ValueError(f"rate_per_hour {rate_per_hour} exceeds "
+                         f"max_rate_per_hour {max_rate}")
+    if max_rate <= 0:
+        return ()
+    rng = random.Random(seed)
+    lam = max_rate / 3600.0
+    out: List[NodeFailure] = []
+    t = 0.0
+    while True:
+        # draw the gap AND the thinning mark unconditionally so the
+        # underlying stream is identical across rates (superset property)
+        t += rng.expovariate(lam)
+        keep = rng.random() * max_rate < rate_per_hour
+        if t >= horizon_s:
+            break
+        if keep:
+            out.append(NodeFailure(t, n_gpus, device_class,
+                                   recover_after_s))
+    return tuple(out)
+
+
+def spot_capacity_trace(horizon_s: float, *, seed: int = 0,
+                        device_class: str = DEFAULT_CLASS,
+                        n_gpus: int = 1,
+                        mean_up_s: float = 1800.0,
+                        mean_down_s: float = 900.0
+                        ) -> Tuple[ClusterEvent, ...]:
+    """Two-state spot availability: the capacity starts granted, is
+    revoked after an Exp(mean_up_s) hold, re-granted after an
+    Exp(mean_down_s) outage, and so on — the classic price-spike
+    availability trace, alternating :class:`SpotRevoke` /
+    :class:`SpotGrant` events over ``n_gpus`` devices."""
+    if mean_up_s <= 0 or mean_down_s <= 0:
+        raise ValueError("mean_up_s and mean_down_s must be positive")
+    rng = random.Random(seed)
+    out: List[ClusterEvent] = []
+    t, available = 0.0, True
+    while True:
+        t += rng.expovariate(1.0 / (mean_up_s if available
+                                    else mean_down_s))
+        if t >= horizon_s:
+            break
+        out.append(SpotRevoke(t, n_gpus, device_class) if available
+                   else SpotGrant(t, n_gpus, device_class))
+        available = not available
+    return tuple(out)
+
+
+def merge_events(*seqs: Sequence[ClusterEvent]
+                 ) -> Tuple[ClusterEvent, ...]:
+    """Merge independently generated event streams into one time-sorted
+    tuple (e.g. a failure trace + a spot trace over different classes)."""
+    out: List[ClusterEvent] = []
+    for s in seqs:
+        out.extend(s)
+    return tuple(sorted(out, key=lambda e: e.t))

@@ -1,9 +1,13 @@
 """Event types + queue for the cluster runtime.
 
-The runtime is a discrete-event simulation over four explicit events:
+The runtime is a discrete-event simulation over five event families:
 
 - :class:`JobArrival` — a job enters the system (online workloads carry
   ``Job.arrival_s``; offline workloads all arrive at t=0).
+- :class:`ClusterEvent` — the cluster itself changes: node failures,
+  spot grants/revocations, capacity grow/shrink.  Concrete types live
+  in :mod:`repro.core.chaos`; only the base class (and its priority
+  slot) is defined here so the queue's total order is in one place.
 - :class:`JobCompletion` — a running job finishes its remaining steps.
   Carries a launch token so completions of preempted launches are
   ignored as stale.
@@ -14,8 +18,12 @@ The runtime is a discrete-event simulation over four explicit events:
   settle observed progress and (for dynamic policies) re-solve.
 
 Tie-breaking at equal timestamps follows the legacy simulator:
-arrivals first, then completions, then restart wake-ups, then
-introspection; among equals, FIFO by push order.
+arrivals first, then cluster events, then completions, then restart
+wake-ups, then introspection; among equals, FIFO by push order.
+A :class:`~repro.core.chaos.NodeFailure` at the same instant as a
+:class:`JobCompletion` therefore deterministically processes FIRST — a
+job whose devices die at the very moment it would have finished loses
+the race (conservative, and pinned by tests/test_events.py).
 """
 from __future__ import annotations
 
@@ -37,21 +45,29 @@ class JobArrival(Event):
 
 
 @dataclasses.dataclass(frozen=True)
-class JobCompletion(Event):
+class ClusterEvent(Event):
+    """Base for cluster-topology events (failures, spot churn, capacity
+    changes).  Processes after same-instant arrivals but BEFORE
+    same-instant completions; see module docstring."""
     PRIORITY = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class JobCompletion(Event):
+    PRIORITY = 2
     job: str = ""
     token: int = -1               # launch token; stale if it mismatches
 
 
 @dataclasses.dataclass(frozen=True)
 class RestartDone(Event):
-    PRIORITY = 2
+    PRIORITY = 3
     job: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
 class IntrospectionTick(Event):
-    PRIORITY = 3
+    PRIORITY = 4
 
 
 class EventQueue:

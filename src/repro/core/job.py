@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from ..models.config import ModelConfig
 from ..optim.adamw import AdamWConfig
@@ -13,6 +14,11 @@ class Job:
 
     The paper's workload (Table 1) is a grid over {model} x {lr} x
     {batch size} for a fixed number of epochs; each grid point is a Job.
+
+    ``weight``, ``deadline_s`` and ``tenant`` only matter under the
+    alternative solver objectives (weighted completion time, tardiness,
+    per-tenant fair share); the defaults make every job equivalent, so
+    the makespan objective ignores them.
     """
     name: str
     cfg: ModelConfig
@@ -22,6 +28,9 @@ class Job:
     lr: float = 1e-4
     seed: int = 0
     arrival_s: float = 0.0          # online workloads: submission time
+    weight: float = 1.0             # objective weight (completion/tardiness)
+    deadline_s: Optional[float] = None   # due time for the tardiness objective
+    tenant: str = "default"         # owner for the fair-share objective
 
     @property
     def opt_cfg(self) -> AdamWConfig:

@@ -18,6 +18,15 @@ decides *which* ones, and thereby which co-locations are legal:
 
 Select via ``ClusterSpec(placement="flat"|"node")``; clusters with more
 than one :class:`~repro.core.job.DeviceClass` always get a ClassPool.
+
+FlatPool and ClassPool are ELASTIC (``supports_elasticity``): the chaos
+layer (:mod:`.chaos`) shrinks them by removing concrete free devices and
+grows them with :meth:`~PlacementBackend.add_devices`, which always
+mints FRESH ids — an id that ever left the pool is never reissued, so
+Gantt history, per-class accounting and the conservation check stay
+unambiguous across arbitrary shrink/grow sequences (``class_of`` keeps
+answering for removed devices).  NodeAware does not support elasticity:
+node-aware plans encode node indices that renumber under churn.
 """
 from __future__ import annotations
 
@@ -33,6 +42,7 @@ class PlacementError(RuntimeError):
 
 class PlacementBackend:
     kind = "base"
+    supports_elasticity = False
 
     def __init__(self, total_gpus: int):
         self.total_gpus = total_gpus
@@ -60,15 +70,49 @@ class PlacementBackend:
         """Which device class a global device id belongs to."""
         return DEFAULT_CLASS
 
+    # ------------------------------------------------------- elasticity
+    def capacity(self, device_class: Optional[str] = None) -> int:
+        """Devices currently PRESENT (free + busy), optionally per class."""
+        return self.total_gpus
+
+    def free_devices(self, device_class: Optional[str] = None
+                     ) -> Tuple[int, ...]:
+        """The concrete free device ids, optionally per class."""
+        raise NotImplementedError
+
+    def remove_devices(self, devices: Sequence[int]) -> None:
+        """Shrink: take concrete FREE devices out of the pool (callers
+        kill/release any launch on them first).  ``class_of`` keeps
+        answering for removed ids."""
+        raise PlacementError(
+            f"placement backend {self.kind!r} does not support "
+            f"elasticity (shrink/grow)")
+
+    def add_devices(self, n: int,
+                    device_class: Optional[str] = None
+                    ) -> Tuple[int, ...]:
+        """Grow: add ``n`` devices with FRESH ids (never reused) and
+        return them."""
+        raise PlacementError(
+            f"placement backend {self.kind!r} does not support "
+            f"elasticity (shrink/grow)")
+
 
 class FlatPool(PlacementBackend):
-    """One big pool of interchangeable GPUs (today's executor model)."""
+    """One big pool of interchangeable GPUs (today's executor model).
+
+    Elastic: ``total_gpus`` tracks the present pool, so ``feasible``
+    tightens under shrink and relaxes under grow.  Device classes are
+    ignored — the whole pool is the single "default" class.
+    """
 
     kind = "flat"
+    supports_elasticity = True
 
     def __init__(self, total_gpus: int):
         super().__init__(total_gpus)
         self._free = list(range(total_gpus))   # kept sorted
+        self._next_id = total_gpus             # fresh ids for add_devices
 
     @property
     def free_gpus(self) -> int:
@@ -86,6 +130,25 @@ class FlatPool(PlacementBackend):
 
     def release(self, placement: Placement) -> None:
         self._free = sorted(set(self._free) | set(placement.devices))
+
+    def free_devices(self, device_class=None):
+        return tuple(self._free)
+
+    def remove_devices(self, devices) -> None:
+        victims = set(devices)
+        missing = victims - set(self._free)
+        if missing:
+            raise PlacementError(
+                f"cannot remove busy/unknown devices {sorted(missing)}")
+        self._free = [d for d in self._free if d not in victims]
+        self.total_gpus -= len(victims)
+
+    def add_devices(self, n, device_class=None):
+        fresh = tuple(range(self._next_id, self._next_id + n))
+        self._next_id += n
+        self._free = sorted(self._free + list(fresh))
+        self.total_gpus += n
+        return fresh
 
 
 class NodeAware(PlacementBackend):
@@ -160,12 +223,15 @@ class NodeAware(PlacementBackend):
 class ClassPool(PlacementBackend):
     """Heterogeneous clusters: one flat free pool per device class.
 
-    Global device ids are contiguous per class in declaration order
-    (matching :meth:`ClusterSpec.device_ranges`), so every Gantt entry's
-    device set maps back to a concrete class-qualified device.
+    Initial global device ids are contiguous per class in declaration
+    order (matching :meth:`ClusterSpec.device_ranges`); elastic grows
+    append fresh ids past the initial ranges.  The id -> class map is
+    persistent — it keeps answering for removed devices, because Gantt
+    entries and the conservation check reference them after the fact.
     """
 
     kind = "class"
+    supports_elasticity = True
 
     def __init__(self, classes: Sequence):
         # classes: Sequence[repro.core.job.DeviceClass]
@@ -174,13 +240,17 @@ class ClassPool(PlacementBackend):
         if not classes:
             raise ValueError("ClassPool needs at least one device class")
         self.classes = classes
-        self._range = {}
         self._free = {}
+        self._cap = {}                 # class -> devices present (free+busy)
+        self._dev_class = {}           # id -> class, persistent
         off = 0
         for dc in classes:
-            self._range[dc.name] = (off, off + dc.total_gpus)
             self._free[dc.name] = list(range(off, off + dc.total_gpus))
+            self._cap[dc.name] = dc.total_gpus
+            for d in range(off, off + dc.total_gpus):
+                self._dev_class[d] = dc.name
             off += dc.total_gpus
+        self._next_id = off
 
     @property
     def free_gpus(self) -> int:
@@ -190,25 +260,24 @@ class ClassPool(PlacementBackend):
         return len(self._free[device_class])
 
     def class_of(self, device: int) -> str:
-        for name, (lo, hi) in self._range.items():
-            if lo <= device < hi:
-                return name
-        raise KeyError(f"device {device} outside cluster")
+        try:
+            return self._dev_class[device]
+        except KeyError:
+            raise KeyError(f"device {device} outside cluster")
 
     def _capacity(self, device_class: str) -> int:
-        lo, hi = self._range[device_class]
-        return hi - lo
+        return self._cap[device_class]
 
     def feasible(self, n_gpus, device_class=None):
         if n_gpus <= 0:
             return False
         if device_class is not None:
-            if device_class not in self._range:
+            if device_class not in self._cap:
                 raise PlacementError(
                     f"unknown device class {device_class!r} "
-                    f"(have {list(self._range)})")
+                    f"(have {list(self._cap)})")
             return n_gpus <= self._capacity(device_class)
-        return any(n_gpus <= self._capacity(n) for n in self._range)
+        return any(n_gpus <= self._capacity(n) for n in self._cap)
 
     def allocate(self, n_gpus, preferred_nodes=None, device_class=None):
         if device_class is not None and device_class not in self._free:
@@ -230,6 +299,50 @@ class ClassPool(PlacementBackend):
             self._free[self.class_of(d)].append(d)
         for free in self._free.values():
             free.sort()
+
+    def capacity(self, device_class: Optional[str] = None) -> int:
+        if device_class is None:
+            return self.total_gpus
+        return self._cap[device_class]
+
+    def free_devices(self, device_class=None):
+        if device_class is None:
+            return tuple(d for free in self._free.values() for d in free)
+        return tuple(self._free[device_class])
+
+    def remove_devices(self, devices) -> None:
+        victims = list(devices)
+        for d in victims:
+            dc = self._dev_class.get(d)
+            if dc is None or d not in self._free[dc]:
+                raise PlacementError(
+                    f"cannot remove busy/unknown device {d}")
+        for d in victims:
+            dc = self._dev_class[d]
+            self._free[dc].remove(d)
+            self._cap[dc] -= 1
+        self.total_gpus -= len(victims)
+
+    def add_devices(self, n, device_class=None):
+        if device_class is None:
+            if len(self.classes) != 1:
+                raise PlacementError(
+                    "add_devices on a multi-class pool needs an explicit "
+                    "device_class")
+            device_class = self.classes[0].name
+        if device_class not in self._free:
+            raise PlacementError(
+                f"unknown device class {device_class!r} "
+                f"(have {list(self._free)})")
+        fresh = tuple(range(self._next_id, self._next_id + n))
+        self._next_id += n
+        for d in fresh:
+            self._dev_class[d] = device_class
+        self._free[device_class] = sorted(
+            self._free[device_class] + list(fresh))
+        self._cap[device_class] += n
+        self.total_gpus += n
+        return fresh
 
 
 def make_backend(cluster, kind: Optional[str] = None) -> PlacementBackend:

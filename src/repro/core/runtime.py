@@ -35,7 +35,13 @@ Engine semantics (shared by both backends):
   DEVICE CLASS before returning;
 - replans are warm-start-capable: the engine hands the previous
   Schedule, the current time and the running set to
-  :meth:`Policy.plan_incremental`.
+  :meth:`Policy.plan_incremental`;
+- chaos (:mod:`.chaos`) injects cluster events through the same queue:
+  failures/revocations shrink the elastic placement pool mid-run (a
+  killed launch salvages its last periodic checkpoint), recoveries and
+  spot grants grow it with fresh device ids, and each applied change
+  triggers an incremental replan against a LIVE capacity view — with
+  the same per-class conservation check holding throughout.
 """
 from __future__ import annotations
 
@@ -45,8 +51,10 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .events import (EventQueue, IntrospectionTick, JobArrival,
-                     JobCompletion, RestartDone)
+from .chaos import (CapacityChange, ChaosTrace, NodeFailure, NodeRecovery,
+                    SpotGrant, SpotRevoke)
+from .events import (ClusterEvent, EventQueue, IntrospectionTick,
+                     JobArrival, JobCompletion, RestartDone)
 from .job import DEFAULT_CLASS, ClusterSpec, Job
 from .perfmodel import profile_key, step_time_of
 from .placement import (ClassPool, PlacementBackend, PlacementError,
@@ -74,6 +82,7 @@ class SimResult:
     gantt: List[GanttEntry]
     replans: int = 0
     restarts: int = 0
+    failures: int = 0          # chaos: NodeFailure events that took devices
     # execution-backend extras (LocalJaxBackend fills per-job segment
     # stats: losses, measured step times, compile costs); {} for sim
     stats: Dict[str, dict] = dataclasses.field(default_factory=dict)
@@ -352,10 +361,24 @@ def execute_runtime(jobs: List[Job], policy: Policy,
                     exec_backend: ExecutionBackend,
                     introspect_every_s: Optional[float] = None,
                     max_events: int = 100000,
-                    backend: Optional[PlacementBackend] = None) -> SimResult:
+                    backend: Optional[PlacementBackend] = None,
+                    chaos: Optional[ChaosTrace] = None) -> SimResult:
     """Run ``jobs`` under ``policy`` on the event-driven engine, with
-    execution delegated to ``exec_backend`` (sim or real)."""
+    execution delegated to ``exec_backend`` (sim or real).
+
+    ``chaos`` injects a :class:`~repro.core.chaos.ChaosTrace` of cluster
+    events: failures/revocations shrink the placement pool mid-run
+    (killing launches on dead devices, which salvage their last periodic
+    checkpoint), recoveries/grants grow it with fresh device ids, and
+    every applied change triggers an incremental replan for dynamic
+    policies.  Requires an elastic placement backend (flat or per-class
+    pools).  Per-class GPU-second conservation is verified at the end
+    exactly as in the undisturbed case."""
     backend = backend or make_backend(cluster)
+    if chaos is not None and len(chaos) and not backend.supports_elasticity:
+        raise ValueError(
+            f"chaos injection needs an elastic placement backend; "
+            f"{backend.kind!r} does not support shrink/grow")
     exec_backend.bind(jobs, profiles, cluster)
     state = ClusterState(jobs, backend)
     q = EventQueue()
@@ -363,10 +386,14 @@ def execute_runtime(jobs: List[Job], policy: Policy,
         q.push(JobArrival(max(0.0, getattr(j, "arrival_s", 0.0)), j))
     if introspect_every_s:
         q.push(IntrospectionTick(introspect_every_s))
+    if chaos is not None:
+        for cev in chaos:
+            q.push(cev)
 
     order = Schedule([])
     replans = 0
     restarts = 0
+    failures = 0
     launch_tokens = {}            # job -> token of its current launch
     next_token = [0]
 
@@ -413,6 +440,11 @@ def execute_runtime(jobs: List[Job], policy: Policy,
                     continue
                 if not backend.feasible(entry.n_gpus,
                                         device_class=entry.device_class):
+                    if chaos is not None:
+                        # the pool shrank under this entry; capacity may
+                        # return (recovery/grant), so wait instead of
+                        # declaring the plan unhostable
+                        continue
                     raise PlacementError(
                         f"{name}: {entry.n_gpus} GPUs "
                         f"(class {entry.device_class!r}) can never be "
@@ -435,6 +467,31 @@ def execute_runtime(jobs: List[Job], policy: Policy,
                 progressed = True
                 break
 
+    def planning_cluster() -> ClusterSpec:
+        """What policies plan over.  Without chaos: the static spec,
+        verbatim (legacy paths stay bit-exact).  Under chaos: a live
+        view whose per-class capacities track the elastic pools, so
+        replans target the devices that actually exist right now."""
+        if chaos is None:
+            return cluster
+        if isinstance(backend, ClassPool):
+            caps = {dc.name: backend.capacity(dc.name)
+                    for dc in cluster.device_classes}
+            if all(caps[dc.name] == dc.total_gpus
+                   for dc in cluster.device_classes):
+                return cluster
+            dcs = tuple(dataclasses.replace(dc, nodes=1,
+                                            gpus_per_node=caps[dc.name])
+                        for dc in cluster.device_classes
+                        if caps[dc.name] > 0)
+            return dataclasses.replace(cluster, device_classes=dcs)
+        cap = backend.capacity()
+        if cap == cluster.total_gpus:
+            return cluster
+        return dataclasses.replace(cluster, nodes=1,
+                                   gpus_per_node=max(1, cap),
+                                   device_classes=())
+
     def replan(preempt: bool):
         nonlocal order, replans, restarts
         live = state.live_jobs()
@@ -446,8 +503,8 @@ def execute_runtime(jobs: List[Job], policy: Policy,
         # backends hand over measured step times where observed.
         order = Schedule.coerce(policy.plan_incremental(
             live, dict(state.remaining), exec_backend.planning_profiles(),
-            cluster, dict(state.current_assign), prev=order, now_s=state.t,
-            running=frozenset(state.running)))
+            planning_cluster(), dict(state.current_assign), prev=order,
+            now_s=state.t, running=frozenset(state.running)))
         replans += 1
         if preempt:
             new_assign = order.assignment_map()
@@ -477,6 +534,84 @@ def execute_runtime(jobs: List[Job], policy: Policy,
                     q.push(RestartDone(
                         state.t + cluster.restart_cost_s, name))
                     restarts += 1
+
+    def kill_launches(victims: set, t: float) -> None:
+        """Kill every launch touching a victim device, salvaging its
+        last periodic checkpoint: progress since
+        ``chaos.checkpoint_every_s`` (measured from launch start) is
+        lost, progress up to the checkpoint — and everything from before
+        this launch — survives.  The job pays the usual restart penalty
+        before it is admissible again."""
+        nonlocal restarts
+        ck = chaos.checkpoint_every_s
+        hit = [n for n, h in state.running.items()
+               if victims & set(h.placement.devices)]
+        for name in hit:
+            h = state.running.pop(name)
+            done = exec_backend.preempt(h, t)
+            t_ck = h.start_s + math.floor(
+                max(0.0, t - h.start_s) / ck) * ck
+            done = min(done, exec_backend.steps_done(h, t_ck))
+            backend.release(h.placement)
+            state.log_run(name, h, t)
+            if done >= h.steps_at_start:
+                state.remaining[name] = 0
+                continue
+            state.gantt.append(GanttEntry(
+                name, "restart", 0, t, t + cluster.restart_cost_s,
+                kind="restart", device_class=h.device_class))
+            state.remaining[name] = max(1, h.steps_at_start - done)
+            state.restarting.add(name)
+            q.push(RestartDone(t + cluster.restart_cost_s, name))
+            restarts += 1
+
+    def shrink(dclass: str, k: int, t: float, *,
+               prefer_free: bool) -> int:
+        """Remove up to ``k`` present devices of ``dclass``.  Failures
+        (``prefer_free=False``) take the lowest present ids, busy or
+        not; revocations/resizes drain the free pool first.  Returns how
+        many devices actually left."""
+        free = sorted(backend.free_devices(dclass))
+        busy = sorted(d for h in state.running.values()
+                      for d in h.placement.devices
+                      if backend.class_of(d) == dclass)
+        pool = (free + busy) if prefer_free else sorted(free + busy)
+        victims = set(pool[:k])
+        if not victims:
+            return 0
+        kill_launches(victims, t)
+        backend.remove_devices(sorted(victims))
+        return len(victims)
+
+    def apply_cluster_event(e: ClusterEvent, t: float) -> bool:
+        """Mutate the pool for one chaos event; True if anything changed."""
+        nonlocal failures
+        if isinstance(e, NodeFailure):
+            removed = shrink(e.device_class, e.n_gpus, t,
+                             prefer_free=False)
+            if removed:
+                failures += 1
+                if e.recover_after_s is not None:
+                    q.push(NodeRecovery(t + e.recover_after_s, removed,
+                                        e.device_class))
+            return removed > 0
+        if isinstance(e, SpotRevoke):
+            # voluntary capacity loss, not a failure: no failure count
+            removed = shrink(e.device_class, e.n_gpus, t,
+                             prefer_free=True)
+            return removed > 0
+        if isinstance(e, (NodeRecovery, SpotGrant)):
+            backend.add_devices(e.n_gpus, device_class=e.device_class)
+            return True
+        if isinstance(e, CapacityChange):
+            if e.delta > 0:
+                backend.add_devices(e.delta, device_class=e.device_class)
+                return True
+            if e.delta < 0:
+                removed = shrink(e.device_class, -e.delta, t,
+                                 prefer_free=True)
+                return removed > 0
+        return False
 
     def finalize_if_done(t: float) -> bool:
         """When every job's remaining work hits zero, jobs still marked
@@ -560,6 +695,19 @@ def execute_runtime(jobs: List[Job], policy: Policy,
             state.waiting.append(ev.job)
             start_fitting()
 
+        elif isinstance(ev, ClusterEvent):
+            state.t = exec_backend.event_time(ev)
+            settle(state.t)   # kills must charge observed progress
+            # coalesce a same-instant burst (correlated failures, a
+            # grant landing with a revoke) into ONE replan
+            batch = [ev] + q.pop_while(ClusterEvent, ev.t)
+            changed = False
+            for e in batch:
+                changed = apply_cluster_event(e, state.t) or changed
+            if changed and policy.dynamic and backend.capacity() > 0:
+                replan(preempt=True)
+            start_fitting()
+
         elif isinstance(ev, IntrospectionTick):
             if state.all_done():
                 continue
@@ -581,9 +729,10 @@ def execute_runtime(jobs: List[Job], policy: Policy,
             q.push(IntrospectionTick(state.t + introspect_every_s))
             start_fitting()
 
-        # deadlock: nothing running, nothing can ever start it
+        # deadlock: nothing running, nothing can ever start it (pending
+        # cluster events count — a recovery/grant can restore capacity)
         if state.waiting and not state.running and not state.restarting \
-                and not q.has_any((JobArrival, RestartDone)):
+                and not q.has_any((JobArrival, RestartDone, ClusterEvent)):
             raise RuntimeError(
                 f"deadlock: waiting={state.waiting} "
                 f"free={backend.free_gpus} order={order.to_tuples()}")
@@ -594,6 +743,7 @@ def execute_runtime(jobs: List[Job], policy: Policy,
                            f"{unfinished}")
     verify_conservation(state)
     return SimResult(policy.name, state.t, state.gantt, replans, restarts,
+                     failures=failures,
                      stats=exec_backend.result_stats())
 
 
@@ -604,13 +754,17 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
                      noise_sigma: float = 0.1, noise_seed: int = 0,
                      max_events: int = 100000,
                      backend: Optional[PlacementBackend] = None,
-                     exec_backend: Optional[ExecutionBackend] = None
+                     exec_backend: Optional[ExecutionBackend] = None,
+                     chaos: Optional[ChaosTrace] = None
                      ) -> SimResult:
     """Run ``jobs`` under ``policy`` on the event-driven cluster runtime
-    (default execution backend: :class:`SimBackend` in virtual time)."""
+    (default execution backend: :class:`SimBackend` in virtual time).
+    ``chaos`` injects a :class:`~repro.core.chaos.ChaosTrace` of node
+    failures / spot churn / capacity changes."""
     exec_backend = exec_backend or SimBackend(noise_sigma=noise_sigma,
                                               noise_seed=noise_seed)
     return execute_runtime(jobs, policy, profiles, cluster,
                            exec_backend=exec_backend,
                            introspect_every_s=introspect_every_s,
-                           max_events=max_events, backend=backend)
+                           max_events=max_events, backend=backend,
+                           chaos=chaos)

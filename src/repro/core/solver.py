@@ -40,6 +40,12 @@ The flat MILP (``solve_joint``), the class-aware MILP
 (``solve_joint_nodes``) share the one builder and all emit Schedule IR
 via :meth:`Solution.to_schedule`.
 
+Beyond the paper's makespan objective, the flat/class/incremental
+solvers accept ``objective=`` (see ``OBJECTIVES``): weighted completion
+time, weighted tardiness against per-job deadlines, and per-tenant fair
+share (minimize the worst tenant's mean completion) — all linear in the
+same start binaries, so no extra variables are introduced.
+
 A greedy list-scheduling fallback guards against solver timeouts (and is
 also used to compute an upper bound that sizes the horizon).
 """
@@ -124,6 +130,58 @@ def _pool_of(choice: Choice, budgets) -> Optional[str]:
     """Which budget pool a choice draws from: its device class when that
     class has its own budget, else the pooled ``None`` key."""
     return choice.device_class if choice.device_class in budgets else None
+
+
+# ------------------------------------------------- alternative objectives
+
+# Every objective is linear in the start binaries (each binary encodes a
+# complete (config, start) decision, so its end time — and therefore its
+# completion cost or lateness — is a CONSTANT coefficient), which is why
+# none of them needs extra MILP variables:
+#
+# - "makespan"             min M,             M >= end_j            (paper)
+# - "weighted_completion"  min sum w_j * end_j
+# - "tardiness"            min sum w_j * max(0, end_j - deadline_j)
+# - "fair_share"           min M,  M >= avg end over each tenant's jobs
+#                          (minimize the WORST tenant's mean completion)
+OBJECTIVES = ("makespan", "weighted_completion", "tardiness", "fair_share")
+
+
+def _weight(j) -> float:
+    return float(getattr(j, "weight", 1.0))
+
+
+def _deadline(j) -> float:
+    d = getattr(j, "deadline_s", None)
+    return math.inf if d is None else float(d)
+
+
+def objective_value(assignments: Iterable[Assignment], jobs: List[Job],
+                    objective: str = "makespan") -> float:
+    """Score a plan under an objective (lower is better).  Jobs absent
+    from ``assignments`` contribute nothing — callers compare plans over
+    the same job set."""
+    ends = {a.job: a.end_s for a in assignments}
+    if objective == "makespan":
+        return max(ends.values(), default=0.0)
+    if objective == "weighted_completion":
+        return sum(_weight(j) * ends[j.name] for j in jobs
+                   if j.name in ends)
+    if objective == "tardiness":
+        tot = 0.0
+        for j in jobs:
+            if j.name in ends and math.isfinite(_deadline(j)):
+                tot += _weight(j) * max(0.0, ends[j.name] - _deadline(j))
+        return tot
+    if objective == "fair_share":
+        per: Dict[str, List[float]] = {}
+        for j in jobs:
+            if j.name in ends:
+                per.setdefault(getattr(j, "tenant", "default"),
+                               []).append(ends[j.name])
+        return max((sum(v) / len(v) for v in per.values()), default=0.0)
+    raise ValueError(f"unknown objective {objective!r}; "
+                     f"expected one of {OBJECTIVES}")
 
 
 # ------------------------------------------------- shared MILP machinery
@@ -330,11 +388,28 @@ def class_choice_map(jobs: List[Job], profiles, classes
     return cm, budgets
 
 
+def _rank_jobs(jobs: List[Job], choices: Dict[str, List[Choice]],
+               objective: str) -> List[Job]:
+    """Greedy dispatch order per objective: longest-first for makespan
+    and fair share, WSPT (weight over best runtime, densest first) for
+    weighted completion, EDF for tardiness (deadline-free jobs last,
+    longest first among them)."""
+    best_rt = {j.name: min((c.runtime_s for c in choices[j.name]),
+                           default=0.0) for j in jobs}
+    if objective == "weighted_completion":
+        return sorted(jobs, key=lambda j: -_weight(j)
+                      / max(best_rt[j.name], 1e-9))
+    if objective == "tardiness":
+        return sorted(jobs,
+                      key=lambda j: (_deadline(j), -best_rt[j.name]))
+    return sorted(jobs, key=lambda j: -best_rt[j.name])
+
+
 def greedy_schedule(jobs: List[Job], choices: Dict[str, List[Choice]],
-                    total_gpus, reserved: Iterable[Tuple] = ()
-                    ) -> Solution:
-    """List scheduling: longest-remaining-work first, each job on its
-    best-throughput feasible choice that fits when it starts.
+                    total_gpus, reserved: Iterable[Tuple] = (),
+                    objective: str = "makespan") -> Solution:
+    """List scheduling: objective-ranked jobs (see :func:`_rank_jobs`),
+    each on its best-throughput feasible choice that fits when it starts.
 
     ``total_gpus`` is either a single pooled budget (int — the legacy
     flat cluster) or per-device-class budgets (``{class_name: gpus}``);
@@ -357,10 +432,7 @@ def greedy_schedule(jobs: List[Job], choices: Dict[str, List[Choice]],
         free[key] -= int(g)
         running.append((float(release_s), int(g), key))
 
-    # rank jobs by their best-possible runtime, longest first
-    ranked = sorted(
-        jobs, key=lambda j: -min((c.runtime_s for c in choices[j.name]),
-                                 default=0.0))
+    ranked = _rank_jobs(jobs, choices, objective)
     t = 0.0
     out: List[Assignment] = []
     queue = list(ranked)
@@ -402,7 +474,8 @@ def _solve_time_indexed(jobs: List[Job],
                         start_windows: Optional[Dict[str, float]] = None,
                         window_pad_s: float = 0.0,
                         reserved: Iterable[Tuple] = (),
-                        m_upper: float = np.inf) -> Solution:
+                        m_upper: float = np.inf,
+                        objective: str = "makespan") -> Solution:
     """The shared time-indexed MILP core behind ``solve_joint`` (one
     pooled budget under the ``None`` key), ``solve_joint_classes`` (one
     budget per device class) and ``solve_residual``.
@@ -485,17 +558,48 @@ def _solve_time_indexed(jobs: List[Job],
     b.add_block(pool_all[occ_var] * n_slots + taus, occ_var,
                 g_all[occ_var],
                 np.full(len(pools) * n_slots, -np.inf), cap_ub)
-    # (3) makespan, aggregated per job: sum end*x - M <= 0 (exact under
-    # the assignment equality, and a tighter relaxation than per-var)
-    b.add_block(np.concatenate([ji_all, np.arange(n_jobs)]),
-                np.concatenate([np.arange(nx),
-                                np.full(n_jobs, b.M_idx)]),
-                np.concatenate([end_all, -np.ones(n_jobs)]),
-                np.full(n_jobs, -np.inf), np.zeros(n_jobs))
-
+    # (3) the continuous variable M + cost vector, per objective.  For
+    # makespan M bounds per-job ends (sum end*x - M <= 0, exact under
+    # the assignment equality, and a tighter relaxation than per-var);
+    # for fair_share M bounds per-TENANT mean ends instead; the two sum
+    # objectives need no M rows at all (cost rides on the binaries).
     cvec = np.zeros(b.nvar)
-    cvec[b.M_idx] = 1.0
-    cvec[:nx] = (delta * 1e-4) * t_all
+    if objective == "fair_share":
+        tenants = sorted({getattr(j, "tenant", "default") for j in jobs})
+        tix = {name: i for i, name in enumerate(tenants)}
+        ten_of = np.array([tix[getattr(j, "tenant", "default")]
+                           for j in jobs])
+        n_ten = np.bincount(ten_of, minlength=len(tenants)) \
+            .astype(np.float64)
+        b.add_block(
+            np.concatenate([ten_of[ji_all], np.arange(len(tenants))]),
+            np.concatenate([np.arange(nx),
+                            np.full(len(tenants), b.M_idx)]),
+            np.concatenate([end_all / n_ten[ten_of[ji_all]],
+                            -np.ones(len(tenants))]),
+            np.full(len(tenants), -np.inf), np.zeros(len(tenants)))
+        cvec[b.M_idx] = 1.0
+        cvec[:nx] = (delta * 1e-4) * t_all
+    else:
+        b.add_block(np.concatenate([ji_all, np.arange(n_jobs)]),
+                    np.concatenate([np.arange(nx),
+                                    np.full(n_jobs, b.M_idx)]),
+                    np.concatenate([end_all, -np.ones(n_jobs)]),
+                    np.full(n_jobs, -np.inf), np.zeros(n_jobs))
+        if objective == "makespan":
+            cvec[b.M_idx] = 1.0
+            cvec[:nx] = (delta * 1e-4) * t_all
+        else:
+            w_all = np.array([_weight(j) for j in jobs])[ji_all]
+            if objective == "weighted_completion":
+                cost = w_all * end_all
+            elif objective == "tardiness":
+                dl = np.array([_deadline(j) for j in jobs])
+                cost = w_all * np.maximum(0.0, end_all - dl[ji_all])
+            else:
+                raise ValueError(f"unknown objective {objective!r}; "
+                                 f"expected one of {OBJECTIVES}")
+            cvec[:nx] = cost + (delta * 1e-4) * t_all
     res = b.solve(cvec, time_limit_s=time_limit_s, mip_gap=mip_gap,
                   m_upper=m_upper)
     if res is None:
@@ -519,8 +623,13 @@ def _solve_time_indexed(jobs: List[Job],
     makespan = max(a.end_s for a in assignments)
     sol = Solution(assignments, makespan, solver_name,
                    milp_status=res.message)
-    # keep whichever is better (slot rounding can make MILP worse)
-    return sol if makespan <= ub.makespan_s + 1e-6 else ub
+    # keep whichever plan is better UNDER THE OBJECTIVE (slot rounding
+    # can make the MILP's integral plan worse than the greedy bound)
+    if objective == "makespan":
+        return sol if makespan <= ub.makespan_s + 1e-6 else ub
+    sv = objective_value(sol.assignments, jobs, objective)
+    uv = objective_value(ub.assignments, jobs, objective)
+    return sol if sv <= uv + 1e-6 else ub
 
 
 # below this estimated binary count the dense MILP is already cheap and
@@ -529,7 +638,8 @@ _REFINE_MIN_BINARIES = 1000
 
 
 def _solve_refined(jobs, choice_map, budgets, ub, solver_name, *,
-                   n_slots, coarse_slots, time_limit_s, mip_gap):
+                   n_slots, coarse_slots, time_limit_s, mip_gap,
+                   objective="makespan"):
     """Coarse-to-fine: solve on ``coarse_slots`` first, then on the full
     ``n_slots`` grid with each job's starts windowed one coarse slot
     around the incumbent's start — roughly a
@@ -542,21 +652,23 @@ def _solve_refined(jobs, choice_map, budgets, ub, solver_name, *,
     if n_slots <= coarse_slots or est_binaries < _REFINE_MIN_BINARIES:
         return _solve_time_indexed(
             jobs, choice_map, budgets, ub, solver_name, n_slots=n_slots,
-            time_limit_s=time_limit_s, mip_gap=mip_gap)
+            time_limit_s=time_limit_s, mip_gap=mip_gap,
+            objective=objective)
     horizon = max(ub.makespan_s, 1e-6) * 1.05
     # budget split keeps the refined path's TOTAL wall under the dense
     # path's single time limit even when both stages hit their caps
     coarse = _solve_time_indexed(
         jobs, choice_map, budgets, ub, solver_name,
         n_slots=coarse_slots, time_limit_s=0.3 * time_limit_s,
-        mip_gap=mip_gap, horizon=horizon)
+        mip_gap=mip_gap, horizon=horizon, objective=objective)
     windows = {a.job: a.start_s for a in coarse.assignments}
-    ub2 = coarse if coarse.makespan_s < ub.makespan_s else ub
+    ub2 = coarse if objective_value(coarse.assignments, jobs, objective) \
+        < objective_value(ub.assignments, jobs, objective) else ub
     return _solve_time_indexed(
         jobs, choice_map, budgets, ub2, solver_name, n_slots=n_slots,
         time_limit_s=0.7 * time_limit_s, mip_gap=mip_gap,
         horizon=horizon, start_windows=windows,
-        window_pad_s=horizon / coarse_slots)
+        window_pad_s=horizon / coarse_slots, objective=objective)
 
 
 def solve_joint(jobs: List[Job],
@@ -566,23 +678,33 @@ def solve_joint(jobs: List[Job],
                 time_limit_s: float = 30.0,
                 mip_gap: float = 0.02,
                 refine: bool = False,
-                coarse_slots: int = 8) -> Solution:
+                coarse_slots: int = 8,
+                objective: str = "makespan") -> Solution:
     """The joint MILP.  Falls back to greedy on infeasibility/timeout.
 
     ``refine=True`` enables the coarse-to-fine pass (solve on
     ``coarse_slots``, re-solve on ``n_slots`` restricted to windows
     around the incumbent) — the fast path for large job counts.
+
+    ``objective`` selects what the MILP minimizes (see ``OBJECTIVES``);
+    the default reproduces the paper's makespan formulation.
     """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"expected one of {OBJECTIVES}")
     choice_map = pooled_choice_map(jobs, profiles)
-    ub = greedy_schedule(jobs, choice_map, total_gpus)
+    ub = greedy_schedule(jobs, choice_map, total_gpus,
+                         objective=objective)
     budgets = {None: int(total_gpus)}
     if refine:
         return _solve_refined(jobs, choice_map, budgets, ub, "milp",
                               n_slots=n_slots, coarse_slots=coarse_slots,
-                              time_limit_s=time_limit_s, mip_gap=mip_gap)
+                              time_limit_s=time_limit_s, mip_gap=mip_gap,
+                              objective=objective)
     return _solve_time_indexed(jobs, choice_map, budgets,
                                ub, "milp", n_slots=n_slots,
-                               time_limit_s=time_limit_s, mip_gap=mip_gap)
+                               time_limit_s=time_limit_s, mip_gap=mip_gap,
+                               objective=objective)
 
 
 def solve_joint_classes(jobs: List[Job], profiles, cluster, *,
@@ -590,7 +712,8 @@ def solve_joint_classes(jobs: List[Job], profiles, cluster, *,
                         time_limit_s: float = 30.0,
                         mip_gap: float = 0.05,
                         refine: bool = False,
-                        coarse_slots: int = 8) -> Solution:
+                        coarse_slots: int = 8,
+                        objective: str = "makespan") -> Solution:
     """Device-class-aware joint MILP for heterogeneous clusters.
 
     A job's config space is the union over device classes of its
@@ -603,17 +726,22 @@ def solve_joint_classes(jobs: List[Job], profiles, cluster, *,
 
     Falls back to a per-class-budget greedy on infeasibility/timeout.
     """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"expected one of {OBJECTIVES}")
     choice_map, budgets = class_choice_map(jobs, profiles,
                                            cluster.device_classes)
-    ub = greedy_schedule(jobs, choice_map, budgets)
+    ub = greedy_schedule(jobs, choice_map, budgets, objective=objective)
     if refine:
         return _solve_refined(jobs, choice_map, budgets, ub,
                               "milp-classes", n_slots=n_slots,
                               coarse_slots=coarse_slots,
-                              time_limit_s=time_limit_s, mip_gap=mip_gap)
+                              time_limit_s=time_limit_s, mip_gap=mip_gap,
+                              objective=objective)
     return _solve_time_indexed(jobs, choice_map, budgets, ub,
                                "milp-classes", n_slots=n_slots,
-                               time_limit_s=time_limit_s, mip_gap=mip_gap)
+                               time_limit_s=time_limit_s, mip_gap=mip_gap,
+                               objective=objective)
 
 
 # --------------------------------------------- warm-started incremental
@@ -666,8 +794,8 @@ def solve_residual(residual_jobs: List[Job],
                    n_slots: int = 24,
                    time_limit_s: float = 10.0,
                    mip_gap: float = 0.05,
-                   warm_starts: Optional[Dict[str, float]] = None
-                   ) -> Solution:
+                   warm_starts: Optional[Dict[str, float]] = None,
+                   objective: str = "makespan") -> Solution:
     """Warm-started incremental replan: solve only the residual jobs.
 
     ``fixed`` assignments (running jobs not worth preempting) become
@@ -685,22 +813,29 @@ def solve_residual(residual_jobs: List[Job],
     if not residual_jobs:
         mk = max((a.end_s for a in fixed), default=0.0)
         return Solution(fixed, mk, "fixed")
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"expected one of {OBJECTIVES}")
     reserved = [(a.device_class, a.n_gpus, a.runtime_s) for a in fixed]
     ub = greedy_schedule(residual_jobs, choice_map, budgets,
-                         reserved=reserved)
+                         reserved=reserved, objective=objective)
     horizon = max([ub.makespan_s] + [a.end_s for a in fixed]
                   + [1e-6]) * 1.05
     delta = horizon / n_slots
     # provably safe incumbent bound: any schedule at least as good as
     # the greedy ub stays slot-representable within one slot per job
-    # in a delay chain (+ one per reservation release it waits on)
+    # in a delay chain (+ one per reservation release it waits on).
+    # Only valid when M IS the makespan — the other objectives leave M
+    # unbounded (fair_share's M tracks tenant means, not the horizon).
     m_upper = min(horizon, ub.makespan_s
-                  + delta * (len(residual_jobs) + len(fixed)))
+                  + delta * (len(residual_jobs) + len(fixed))) \
+        if objective == "makespan" else np.inf
     sol = _solve_time_indexed(
         residual_jobs, choice_map, budgets, ub, "milp-incremental",
         n_slots=n_slots, time_limit_s=time_limit_s, mip_gap=mip_gap,
         horizon=horizon, start_windows=warm_starts,
-        window_pad_s=horizon / 8.0, reserved=reserved, m_upper=m_upper)
+        window_pad_s=horizon / 8.0, reserved=reserved, m_upper=m_upper,
+        objective=objective)
     assignments = fixed + list(sol.assignments)
     mk = max(a.end_s for a in assignments)
     name = sol.solver if sol.solver.startswith("milp") \

@@ -1,0 +1,120 @@
+"""EventQueue ordering contract: the runtime's total order over events.
+
+Pins the tie-breaking the engine depends on — in particular that a
+NodeFailure at the same instant as a JobCompletion processes FIRST (the
+finishing job loses the race; conservative, see events.py docstring).
+"""
+import pytest
+
+from repro.core.chaos import NodeFailure, SpotGrant, SpotRevoke
+from repro.core.events import (ClusterEvent, Event, EventQueue,
+                               IntrospectionTick, JobArrival,
+                               JobCompletion, RestartDone)
+
+
+def test_priority_total_order_at_equal_time():
+    q = EventQueue()
+    # push in WORST-case order; pop must follow the documented priority
+    q.push(Event(5.0))
+    q.push(IntrospectionTick(5.0))
+    q.push(RestartDone(5.0, "r"))
+    q.push(JobCompletion(5.0, "c", 1))
+    q.push(NodeFailure(5.0))
+    q.push(JobArrival(5.0, None))
+    kinds = [type(q.pop()) for _ in range(6)]
+    assert kinds == [JobArrival, NodeFailure, JobCompletion,
+                     RestartDone, IntrospectionTick, Event]
+
+
+def test_node_failure_beats_same_time_completion():
+    # a job's devices dying at the very moment it would complete: the
+    # failure processes first, so the job restarts from its checkpoint
+    q = EventQueue()
+    q.push(JobCompletion(100.0, "job", 7))
+    q.push(NodeFailure(100.0, n_gpus=2))
+    assert isinstance(q.pop(), NodeFailure)
+    assert isinstance(q.pop(), JobCompletion)
+
+
+def test_earlier_time_beats_priority():
+    q = EventQueue()
+    q.push(JobArrival(2.0, None))         # high priority, later
+    q.push(IntrospectionTick(1.0))        # low priority, earlier
+    assert isinstance(q.pop(), IntrospectionTick)
+
+
+def test_fifo_among_equals():
+    q = EventQueue()
+    for name in ("a", "b", "c"):
+        q.push(JobCompletion(3.0, name, 0))
+    assert [q.pop().job for _ in range(3)] == ["a", "b", "c"]
+
+
+def test_peek_does_not_pop():
+    q = EventQueue()
+    assert q.peek() is None
+    q.push(RestartDone(1.0, "x"))
+    assert q.peek().job == "x"
+    assert len(q) == 1
+    assert q.pop().job == "x"
+    assert not q
+
+
+def test_pop_while_epsilon_boundaries():
+    eps = 1e-6
+    q = EventQueue()
+    q.push(JobArrival(1.0, "in0"))
+    q.push(JobArrival(1.0 + 0.5 * eps, "in1"))  # within the tolerance
+    q.push(JobArrival(1.0 + 10 * eps, "out"))   # beyond it
+    got = q.pop_while(JobArrival, 1.0, eps=eps)
+    assert [e.job for e in got] == ["in0", "in1"]
+    assert q.peek().job == "out"
+
+
+def test_pop_while_stops_at_other_kind():
+    # a same-time event of another kind ends the scan even when more
+    # matching events sit behind it (heap order interleaves them)
+    q = EventQueue()
+    q.push(NodeFailure(2.0))
+    q.push(JobCompletion(2.0, "done", 0))
+    q.push(SpotRevoke(2.0))
+    got = q.pop_while(ClusterEvent, 2.0)
+    assert [type(e) for e in got] == [NodeFailure, SpotRevoke]
+    assert isinstance(q.peek(), JobCompletion)
+
+    q2 = EventQueue()
+    q2.push(JobArrival(2.0, "a"))      # higher priority than ClusterEvent
+    q2.push(NodeFailure(2.0))
+    assert q2.pop_while(ClusterEvent, 2.0) == []
+    assert isinstance(q2.pop(), JobArrival)
+
+
+def test_pop_while_different_time_excluded():
+    q = EventQueue()
+    q.push(NodeFailure(1.0))
+    q.push(NodeFailure(1.5))
+    got = q.pop_while(ClusterEvent, 1.0)
+    assert len(got) == 1 and got[0].t == 1.0
+    assert q.peek().t == 1.5
+
+
+def test_has_any_mixed_kinds_at_identical_timestamps():
+    q = EventQueue()
+    q.push(JobCompletion(4.0, "j", 0))
+    q.push(SpotGrant(4.0, n_gpus=2))
+    q.push(IntrospectionTick(4.0))
+    assert q.has_any((ClusterEvent,))
+    assert q.has_any((JobCompletion, RestartDone))
+    assert q.has_any((SpotGrant,))          # concrete subtype matches too
+    assert not q.has_any((JobArrival, RestartDone))
+    # drain; has_any reflects the live heap, not history
+    while q:
+        q.pop()
+    assert not q.has_any((ClusterEvent, JobCompletion, IntrospectionTick))
+
+
+@pytest.mark.parametrize("cls", [NodeFailure, SpotGrant, SpotRevoke])
+def test_chaos_events_share_cluster_priority(cls):
+    assert issubclass(cls, ClusterEvent)
+    assert cls.PRIORITY == ClusterEvent.PRIORITY
+    assert JobArrival.PRIORITY < cls.PRIORITY < JobCompletion.PRIORITY
