@@ -50,6 +50,10 @@ GATED_METRICS = (
     # BENCH_profile.json (roofline strategy): the roofline-planned
     # makespan replayed against ground truth
     "makespan_roofline_s",
+    # BENCH_serve.json (mixed train+serve cluster): the sweep makespan
+    # under each fleet policy
+    "makespan_saturn_serve_s",
+    "makespan_static_partition_s",
 )
 
 # fixed-ceiling gates (ISSUE 6 acceptance criteria): fresh > limit fails
@@ -61,6 +65,10 @@ ABSOLUTE_MAX = {
 # fixed-floor gates (higher is better): fresh < limit fails
 ABSOLUTE_MIN = {
     "roofline_trial_reduction_x": 20.0,
+    # BENCH_serve.json acceptance criteria: serving never misses its
+    # SLO, and adaptive sharing beats the static partition by a margin
+    "serve_attainment": 0.99,
+    "static_over_saturn_x": 1.2,
 }
 
 # per-metric tolerance overrides (take precedence over --tolerance):

@@ -783,6 +783,124 @@ def bench_e2e(quick=False):
     return out
 
 
+# -------------------------------------------------------------- serving
+
+def bench_serve(quick=False):
+    """Mixed cluster: a model-selection sweep sharing GPUs with a live
+    SLO-bound serving fleet.  Saturn's adaptive fleets return off-peak
+    GPUs to the sweep (and evict training when bursts land, paying real
+    restart penalties); the baseline is today's practice — a static GPU
+    partition peak-provisioned for the worst traffic window.  Gates:
+    BOTH runs hold >= 99% SLO attainment, and the adaptive run finishes
+    the sweep >= 1.2x faster.  Writes BENCH_serve.json."""
+    from repro.configs import get_config
+    from repro.core.baselines import (CurrentPractice, SaturnPolicy,
+                                      static_partition_fleets)
+    from repro.core.executor import simulate
+    from repro.core.job import (SERVE_TECH, ClusterSpec, DeviceClass, Job,
+                                ServeJob)
+    from repro.core.profiler import Profile
+    from repro.data.traffic import bursty_trace
+    from repro.serving.fleet import FleetManager, serve_profiles
+
+    import numpy as np
+
+    cluster = ClusterSpec(device_classes=(
+        DeviceClass("a100", nodes=1, gpus_per_node=8,
+                    hbm_per_gpu=40e9, speed_hint=1.0),))
+    cfg = get_config("xlstm-125m").reduced()
+    n_jobs = 4 if quick else 6
+    steps = 2000 if quick else 4000
+    horizon = 900.0 if quick else 1800.0
+    tl = 5 if quick else 10
+    rng = np.random.RandomState(0)
+    jobs, profiles = [], {}
+    for i in range(n_jobs):
+        j = Job(f"t{i}", cfg, 8, 64, total_steps=steps, seed=i)
+        jobs.append(j)
+        base = rng.uniform(0.3, 0.5)
+        eff = rng.uniform(0.8, 0.95)
+        for g in (1, 2, 4):
+            profiles[(j.name, "ddp", "a100", g)] = Profile(
+                j.name, "ddp", g, base / g ** eff, 1e9, True, "t",
+                device_class="a100")
+
+    # diurnal-ish bursty service: quiet base load, 15x bursts the
+    # static partition must be provisioned for at ALL times
+    trace = bursty_trace(2.0, horizon, seed=1, burst_rps=30.0,
+                         burst_every_s=horizon / 3.0, burst_len_s=120.0)
+    serve = ServeJob(name="svc", cfg=cfg, slo_p99_s=1.0, trace=trace,
+                     slots=4, gpus_per_replica=1, prompt_len=32,
+                     max_new_tokens=96)
+    merged = dict(profiles)
+    merged.update(serve_profiles([serve], cluster, base_step_s=0.004))
+
+    def sweep_makespan(res):
+        # training may finish before the traffic horizon keeps the run
+        # alive: the sweep's makespan is the last TRAINING segment end
+        return max(e.end_s for e in res.gantt
+                   if e.kind == "run" and e.technique != SERVE_TECH)
+
+    out = {"quick": quick, "scenarios": {}}
+    t_bench = time.time()
+    runs = {
+        "saturn_adaptive": (
+            SaturnPolicy(time_limit_s=tl),
+            FleetManager([serve], cluster, window_s=60.0,
+                         horizon_s=horizon)),
+        "static_partition": (
+            CurrentPractice(),
+            static_partition_fleets([serve], cluster, window_s=60.0,
+                                    horizon_s=horizon)),
+    }
+    rows = {}
+    for label, (policy, fm) in runs.items():
+        t0 = time.time()
+        res = simulate(jobs, policy, merged, cluster,
+                       introspect_every_s=60.0, fleets=fm)
+        wall = time.time() - t0
+        sv = res.stats["serving"]
+        svc = sv["svc"]
+        worst = min((w["attainment"] for w in svc["windows"]
+                     if w["requests"]), default=1.0)
+        rows[label] = {
+            "sweep_makespan_s": sweep_makespan(res),
+            "serve_attainment": svc["attainment"],
+            "worst_window_attainment": worst,
+            "requests": svc["requests"],
+            "peak_replicas": svc["peak_replicas"],
+            "evictions": sv["evictions"],
+            "restarts": res.restarts,
+            "bench_wall_s": wall,
+        }
+        emit(f"serve_{label}", wall * 1e6,
+             f"sweep={rows[label]['sweep_makespan_s']:.0f}s "
+             f"attain={svc['attainment']:.3f} "
+             f"evict={sv['evictions']}")
+    sat, stat = rows["saturn_adaptive"], rows["static_partition"]
+    ratio = stat["sweep_makespan_s"] / sat["sweep_makespan_s"]
+    out["scenarios"] = rows
+    out["makespan_saturn_serve_s"] = sat["sweep_makespan_s"]
+    out["makespan_static_partition_s"] = stat["sweep_makespan_s"]
+    out["serve_attainment"] = min(sat["serve_attainment"],
+                                  stat["serve_attainment"])
+    out["static_over_saturn_x"] = ratio
+    out["bench_wall_s"] = time.time() - t_bench
+    emit("serve_static_over_saturn", out["bench_wall_s"] * 1e6,
+         f"{ratio:.2f}x attain={out['serve_attainment']:.3f}")
+    # acceptance gates: serving never misses its SLO under EITHER
+    # policy, and sharing beats the static partition by a real margin
+    assert out["serve_attainment"] >= 0.99, \
+        f"SLO attainment {out['serve_attainment']:.3f} < 0.99"
+    assert ratio >= 1.2, \
+        f"adaptive sharing won only {ratio:.2f}x (< 1.2x) over static"
+    path = os.path.join(ROOT, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\nwrote {path}")
+    return out
+
+
 # ------------------------------------------------------ performance model
 
 def bench_profile(quick=False):
@@ -1333,7 +1451,8 @@ def main() -> None:
     ap.add_argument("which", nargs="?", default="all",
                     choices=["all", "roofline", "kernels", "solver",
                              "introspection", "table2", "schedule",
-                             "profile", "hetero", "chaos", "e2e"])
+                             "profile", "hetero", "chaos", "e2e",
+                             "serve"])
     ap.add_argument("--quick", action="store_true",
                     help="reduced workloads (CI smoke job)")
     args = ap.parse_args()
@@ -1355,6 +1474,8 @@ def main() -> None:
         bench_chaos(quick=args.quick)
     if which in ("e2e", "all"):
         bench_e2e(quick=args.quick)
+    if which in ("serve", "all"):
+        bench_serve(quick=args.quick)
     if which in ("introspection", "all"):
         bench_introspection()
     if which in ("table2", "all"):

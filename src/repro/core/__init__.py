@@ -30,9 +30,10 @@ from .chaos import (CapacityChange, ChaosTrace,             # noqa: F401
                     NodeFailure, NodeRecovery, SpotGrant, SpotRevoke,
                     merge_events, poisson_node_failures,
                     spot_capacity_trace)
-from .job import ClusterSpec, DeviceClass, Job, hpo_grid    # noqa: F401
-from .perfmodel import (ObservedProfiles, PerfModel,        # noqa: F401
-                        ThroughputCurve, select_anchor_counts)
+from .job import (ClusterSpec, DeviceClass, Job,            # noqa: F401
+                  ServeJob, hpo_grid)
+from .perfmodel import (MergedProfiles, ObservedProfiles,   # noqa: F401
+                        PerfModel, ThroughputCurve, select_anchor_counts)
 from .placement import ClassPool, FlatPool, NodeAware, make_backend  # noqa: F401
 from .runtime import (ExecutionBackend, SimBackend,         # noqa: F401
                       SimResult, execute_runtime, simulate_runtime)

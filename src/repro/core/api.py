@@ -19,7 +19,7 @@ from typing import List, Optional, Sequence, Union
 
 from .baselines import SaturnPolicy
 from .executor import simulate
-from .job import ClusterSpec, Job
+from .job import ClusterSpec, Job, ServeJob
 from .library import ParallelismLibrary
 from .profiler import HARDWARE, HardwareSpec, TrialRunner
 from .runtime import SimResult
@@ -39,6 +39,7 @@ class SaturnSession:
         for dc in cluster.device_classes:
             self.runner.register_class(dc)
         self.jobs: List[Job] = []
+        self.serves: List[ServeJob] = []
         # a PerfModel (strategy="interpolate") or legacy profile dict
         self.profiles = {}
 
@@ -69,6 +70,17 @@ class SaturnSession:
                     for j, a in zip(jobs, arrivals)]
         self.jobs.extend(jobs)
         return jobs
+
+    def submit_serving(self, serves: Sequence[ServeJob]):
+        """Add serving workloads: each :class:`~repro.core.job.ServeJob`
+        is a model with a p99 latency SLO and a request-arrival trace
+        (see :mod:`repro.data.traffic`).  ``run()`` sizes a
+        continuous-batching replica fleet per serve job — device class
+        and per-window replica count — and trains the sweep around the
+        capacity the fleets hold."""
+        serves = list(serves)
+        self.serves.extend(serves)
+        return serves
 
     def gpu_counts(self, dense: bool = False):
         """Candidate GPU counts: the geometric ladder (what gets real
@@ -137,7 +149,10 @@ class SaturnSession:
             objective: Optional[str] = None,
             backend: str = "sim",
             ckpt_dir: Optional[str] = None,
-            chaos=None) -> SimResult:
+            chaos=None,
+            serve_window_s: float = 60.0,
+            serve_util_cap: float = 0.7,
+            serve_adaptive: bool = True) -> SimResult:
         """Solve + execute on the cluster runtime.
 
         ``backend`` selects the execution substrate the one Schedule IR
@@ -165,6 +180,14 @@ class SaturnSession:
         resizes — into the run; killed launches salvage their last
         periodic checkpoint and dynamic policies replan on the new
         capacity.
+
+        Serving (``submit_serving``): each serve job gets an SLO-sized
+        continuous-batching fleet re-planned every ``serve_window_s``
+        (``serve_adaptive=False`` holds peak provisioning — the static
+        partition baseline); fleet growth may evict training launches,
+        and per-window p50/p99/attainment land in
+        ``result.stats["serving"]``.  ``serve_util_cap`` is the target
+        utilization headroom per replica.
         """
         knobs = {k: v for k, v in (("n_slots", n_slots),
                                    ("time_limit_s", time_limit_s),
@@ -194,8 +217,21 @@ class SaturnSession:
         if backend == "local":
             from .local_backend import LocalJaxBackend
             exec_backend = LocalJaxBackend(self.library, ckpt_dir=ckpt_dir)
-        return simulate(self.jobs, policy, self.profiles, cluster,
+        profiles, fleets = self.profiles, None
+        if self.serves:
+            from ..serving.fleet import FleetManager, serve_profiles
+            from .perfmodel import MergedProfiles
+            sp = serve_profiles(self.serves, cluster)
+            profiles = (MergedProfiles(sp, profiles)
+                        if not isinstance(profiles, dict)
+                        else {**profiles, **sp})
+            fleets = FleetManager(self.serves, cluster,
+                                  window_s=serve_window_s,
+                                  util_cap=serve_util_cap,
+                                  adaptive=serve_adaptive)
+        return simulate(self.jobs, policy, profiles, cluster,
                         introspect_every_s=introspect_every_s
                         if policy.dynamic else None,
                         noise_sigma=noise_sigma,
-                        exec_backend=exec_backend, chaos=chaos)
+                        exec_backend=exec_backend, chaos=chaos,
+                        fleets=fleets)

@@ -480,3 +480,18 @@ class SaturnStatic(SaturnPolicy):
     """Ablation: the MILP without introspection."""
     name = "saturn-static"
     dynamic = False
+
+
+def static_partition_fleets(serves, cluster, *, window_s: float = 60.0,
+                            horizon_s=None, util_cap: float = 0.7):
+    """The serving-side current practice: a peak-provisioned GPU
+    partition per service, held for the whole run.  Returns a
+    non-adaptive :class:`~repro.serving.fleet.FleetManager` — every
+    fleet is sized for its trace's WORST window and never scales down,
+    so training only ever sees the leftover capacity.  The contrast
+    baseline for Saturn's adaptive fleets, which return off-peak GPUs
+    to the sweep and evict training again when bursts land."""
+    from ..serving.fleet import FleetManager
+    return FleetManager(serves, cluster, window_s=window_s,
+                        horizon_s=horizon_s, util_cap=util_cap,
+                        adaptive=False)

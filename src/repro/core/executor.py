@@ -31,7 +31,7 @@ def simulate(jobs: List[Job], policy: Policy,
              noise_sigma: float = 0.1, noise_seed: int = 0,
              max_events: int = 100000,
              placement: Optional[str] = None,
-             exec_backend=None, chaos=None) -> SimResult:
+             exec_backend=None, chaos=None, fleets=None) -> SimResult:
     """Compatibility wrapper: run on the event-driven runtime.
 
     ``placement`` overrides ``cluster.placement`` ("flat" keeps the
@@ -40,7 +40,9 @@ def simulate(jobs: List[Job], policy: Policy,
     virtual-time :class:`~repro.core.runtime.SimBackend`; pass a
     :class:`~repro.core.local_backend.LocalJaxBackend` to really train).
     ``chaos`` injects a :class:`~repro.core.chaos.ChaosTrace` of cluster
-    events (failures, spot churn, resizes) into the run.
+    events (failures, spot churn, resizes) into the run.  ``fleets``
+    runs serving fleets alongside training (a
+    :class:`~repro.serving.fleet.FleetManager`).
     """
     import dataclasses as _dc
     if placement is not None and \
@@ -52,7 +54,8 @@ def simulate(jobs: List[Job], policy: Policy,
                             introspect_every_s=introspect_every_s,
                             noise_sigma=noise_sigma, noise_seed=noise_seed,
                             max_events=max_events,
-                            exec_backend=exec_backend, chaos=chaos)
+                            exec_backend=exec_backend, chaos=chaos,
+                            fleets=fleets)
 
 
 def simulate_legacy(jobs: List[Job], policy: Policy,

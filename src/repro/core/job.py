@@ -38,6 +38,49 @@ class Job:
                            total_steps=self.total_steps)
 
 
+# Profile-key technique under which serving (continuous-batching decode)
+# throughput is recorded: a serve profile keyed (name, SERVE_TECH, class,
+# gpus_per_replica) carries the per-token engine step time of ONE replica,
+# exactly like a training profile carries a training step time.
+SERVE_TECH = "serve"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeJob:
+    """One serving fleet: a model behind a latency SLO fed by a request
+    trace.  The inference-side sibling of :class:`Job` — it flows through
+    the same profile → solve → execute → observe loop, but instead of a
+    step budget it carries *traffic*: ``trace`` is a tuple of request
+    arrival times (seconds, runtime clock; see :mod:`repro.data.traffic`
+    for the seeded diurnal/bursty generators).
+
+    A fleet is served by N replicas of ``gpus_per_replica`` GPUs, each
+    running a :class:`~repro.serving.engine.ContinuousBatchingEngine`
+    with ``slots`` concurrent sequences; a request occupies a slot for
+    ``prompt_len + max_new_tokens`` engine steps.  The SLO is on p99
+    request latency (arrival → last token) per traffic window.
+    """
+    name: str
+    cfg: ModelConfig
+    slo_p99_s: float                 # p99 latency SLO per window (seconds)
+    trace: tuple = ()                # request arrival times (seconds)
+    prompt_len: int = 32             # prompt tokens per request
+    max_new_tokens: int = 96         # decode tokens per request
+    slots: int = 8                   # concurrent sequences per replica
+    gpus_per_replica: int = 1
+    max_replicas: int = 64           # fleet-size cap for the planner
+    arrival_s: float = 0.0           # when the fleet comes online
+    weight: float = 1.0
+    tenant: str = "default"
+
+    def __post_init__(self):
+        object.__setattr__(self, "trace", tuple(self.trace))
+
+    @property
+    def tokens_per_request(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+
 DEFAULT_CLASS = "default"
 
 

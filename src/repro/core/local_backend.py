@@ -269,6 +269,22 @@ class LocalJaxBackend(ExecutionBackend):
             return self._profiles
         return ObservedProfiles(self._profiles, self.observed)
 
+    def serve_step_time(self, serve, device_class=None) -> float:
+        """REALLY measure a serving replica: run a saturated
+        ContinuousBatchingEngine burst for this model (compile excluded)
+        instead of reading the analytic serve profile.  Memoized per
+        (model, device class, replica size) — fleets re-measure through
+        replans, not per tick."""
+        key = (serve.name, device_class, serve.gpus_per_replica)
+        cache = getattr(self, "_serve_measured", None)
+        if cache is None:
+            cache = self._serve_measured = {}
+        if key not in cache:
+            from ..serving.profile import measure_serve_step_time
+            cache[key] = measure_serve_step_time(
+                serve.cfg, slots=min(serve.slots, 4), seed=0)
+        return cache[key]
+
     # ------------------------------------------------------ run lifecycle
     def launch(self, job, entry, placement, device_class, remaining, t,
                token) -> LocalHandle:

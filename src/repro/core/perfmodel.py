@@ -357,6 +357,38 @@ class ObservedProfiles(Mapping):
         return len(self._base)
 
 
+class MergedProfiles(Mapping):
+    """Several profile Mappings behind one read-only view, first hit
+    wins.  The serving path needs this: training step times live in a
+    :class:`PerfModel` (or dict) while serve-replica step times are a
+    separate dict keyed ``(name, "serve", class, gpus)`` — merging keeps
+    both answerable through the same adapters without mutating either.
+    Note a wrapped :class:`PerfModel` is consulted through its
+    enumerated grid keys here (the dict path), not its curve API."""
+
+    def __init__(self, *parts):
+        self._parts = parts
+
+    def __getitem__(self, key: Tuple) -> Profile:
+        for p in self._parts:
+            try:
+                return p[key]
+            except KeyError:
+                continue
+        raise KeyError(key)
+
+    def __iter__(self) -> Iterator[Tuple]:
+        seen = set()
+        for p in self._parts:
+            for k in p:
+                if k not in seen:
+                    seen.add(k)
+                    yield k
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self)
+
+
 # ------------------------------------------------- dict/model adapters
 #
 # Legacy dicts come in two shapes: 3-tuple keys (job, tech, g) for

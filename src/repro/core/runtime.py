@@ -55,8 +55,8 @@ from .chaos import (CapacityChange, ChaosTrace, NodeFailure, NodeRecovery,
                     SpotGrant, SpotRevoke)
 from .events import (ClusterEvent, EventQueue, IntrospectionTick,
                      JobArrival, JobCompletion, RestartDone)
-from .job import DEFAULT_CLASS, ClusterSpec, Job
-from .perfmodel import profile_key, step_time_of
+from .job import DEFAULT_CLASS, SERVE_TECH, ClusterSpec, Job
+from .perfmodel import ObservedProfiles, profile_key, step_time_of
 from .placement import (ClassPool, PlacementBackend, PlacementError,
                         make_backend)
 from .profiler import Profile
@@ -180,6 +180,17 @@ class ExecutionBackend:
         key on it); real backends overlay measured step times."""
         return self._profiles
 
+    def serve_step_time(self, serve, device_class: Optional[str] = None
+                        ) -> float:
+        """Per-token engine step time of ONE serving replica of
+        ``serve`` (a :class:`~repro.core.job.ServeJob`) on
+        ``device_class`` — the serving counterpart of :meth:`est_step`.
+        The base answers from the bound profiles; real backends measure
+        an actual :class:`~repro.serving.engine.ContinuousBatchingEngine`."""
+        return step_time_of(self._profiles, serve.name, SERVE_TECH,
+                            serve.gpus_per_replica,
+                            device_class=device_class)
+
     # ------------------------------------------------------ run lifecycle
     def launch(self, job: Job, entry, placement: Placement,
                device_class: str, remaining: int, t: float,
@@ -251,6 +262,12 @@ class SimBackend(ExecutionBackend):
 
     def preempt(self, handle: LaunchHandle, t: float) -> int:
         return self.steps_done(handle, t)
+
+    def serve_step_time(self, serve, device_class=None) -> float:
+        """Serving step times drift with the same seeded noise training
+        steps do — the "measured" value the fleet manager observes."""
+        return self._true_step(serve.name, SERVE_TECH,
+                               serve.gpus_per_replica, device_class)
 
 
 def verify_conservation(state: "ClusterState") -> None:
@@ -362,7 +379,8 @@ def execute_runtime(jobs: List[Job], policy: Policy,
                     introspect_every_s: Optional[float] = None,
                     max_events: int = 100000,
                     backend: Optional[PlacementBackend] = None,
-                    chaos: Optional[ChaosTrace] = None) -> SimResult:
+                    chaos: Optional[ChaosTrace] = None,
+                    fleets=None) -> SimResult:
     """Run ``jobs`` under ``policy`` on the event-driven engine, with
     execution delegated to ``exec_backend`` (sim or real).
 
@@ -373,12 +391,29 @@ def execute_runtime(jobs: List[Job], policy: Policy,
     every applied change triggers an incremental replan for dynamic
     policies.  Requires an elastic placement backend (flat or per-class
     pools).  Per-class GPU-second conservation is verified at the end
-    exactly as in the undisturbed case."""
+    exactly as in the undisturbed case.
+
+    ``fleets`` (a :class:`~repro.serving.fleet.FleetManager`) runs
+    serving fleets alongside training: replicas hold real placement-pool
+    device blocks (Gantt segments, conservation accounting), are resized
+    at introspection ticks as the traffic trace shifts — growth may
+    EVICT training launches, which pay the usual restart penalty —
+    and measured replica step times feed back into the profile view
+    replans plan over.  Per-fleet per-window latency/SLO stats land in
+    ``SimResult.stats["serving"]``."""
     backend = backend or make_backend(cluster)
     if chaos is not None and len(chaos) and not backend.supports_elasticity:
         raise ValueError(
             f"chaos injection needs an elastic placement backend; "
             f"{backend.kind!r} does not support shrink/grow")
+    if fleets is not None:
+        if backend.kind == "node":
+            raise ValueError("serving fleets require flat or class "
+                             "placement (node-aware pools cannot carve "
+                             "replica blocks)")
+        if not introspect_every_s:
+            introspect_every_s = fleets.window_s
+        fleets.plans(profiles)
     exec_backend.bind(jobs, profiles, cluster)
     state = ClusterState(jobs, backend)
     q = EventQueue()
@@ -403,6 +438,85 @@ def execute_runtime(jobs: List[Job], policy: Policy,
         for name, h in state.running.items():
             done = exec_backend.steps_done(h, upto_t)
             state.remaining[name] = max(0, h.steps_at_start - done)
+
+    # ------------------------------------------- serving-fleet plumbing
+    def _fleet_free(dclass: str) -> int:
+        if isinstance(backend, ClassPool):
+            return backend.free_in(dclass)
+        return backend.free_gpus
+
+    def _fleet_evict(n_gpus: int, dclass: str, t: float) -> None:
+        """Free capacity for fleet growth by preempting training
+        launches (largest first, same class) — serving's SLO outranks
+        sweep throughput, so training pays the restart penalty."""
+        nonlocal restarts
+        victims = sorted(
+            (h for h in state.running.values()
+             if not isinstance(backend, ClassPool)
+             or h.device_class == dclass),
+            key=lambda h: -h.n_gpus)
+        for h in victims:
+            if _fleet_free(dclass) >= n_gpus:
+                break
+            name = h.job.name
+            state.running.pop(name)
+            done = exec_backend.preempt(h, t)
+            backend.release(h.placement)
+            state.log_run(name, h, t)
+            if done >= h.steps_at_start:
+                state.remaining[name] = 0
+                continue
+            state.gantt.append(GanttEntry(
+                name, "restart", 0, t, t + cluster.restart_cost_s,
+                kind="restart", device_class=h.device_class))
+            state.remaining[name] = max(1, h.steps_at_start - done)
+            state.restarting.add(name)
+            q.push(RestartDone(t + cluster.restart_cost_s, name))
+            restarts += 1
+            fleets.evictions += 1
+
+    def _grow_replica(fs, t: float) -> bool:
+        g = fs.serve.gpus_per_replica
+        dclass = fs.device_class if isinstance(backend, ClassPool) else None
+        pl = backend.allocate(g, device_class=dclass)
+        if pl is None:
+            _fleet_evict(g, fs.device_class, t)
+            pl = backend.allocate(g, device_class=dclass)
+            if pl is None:
+                return False
+        next_token[0] += 1
+        tok = next_token[0]
+        h = LaunchHandle(fs.serve, SERVE_TECH, g, pl, t, 0.0, 0, tok)
+        state.note_alloc(tok, t, pl.n_gpus,
+                         getattr(pl, "device_class", DEFAULT_CLASS))
+        fs.handles.append(h)
+        return True
+
+    def _release_replica(fs, t: float) -> None:
+        h = fs.handles.pop()
+        backend.release(h.placement)
+        state.log_run(fs.serve.name, h, t)
+
+    def _measure_step_time(fs) -> float:
+        return exec_backend.serve_step_time(fs.serve, fs.device_class)
+
+    class _FleetHooks:
+        pass
+
+    hooks = _FleetHooks()
+    hooks.grow_replica = _grow_replica
+    hooks.release_replica = _release_replica
+    hooks.measure_step_time = _measure_step_time
+    hooks.profiles = profiles
+
+    def planning_profiles():
+        """What replans optimize over: the backend's view (measured
+        training step times on real backends), plus the fleet manager's
+        measured serve-replica step times when serving is live."""
+        base = exec_backend.planning_profiles()
+        if fleets is not None and fleets.observed:
+            return ObservedProfiles(base, fleets.observed)
+        return base
 
     def allocate_for(entry):
         """Place one entry: class-pinned entries draw from their class's
@@ -468,15 +582,19 @@ def execute_runtime(jobs: List[Job], policy: Policy,
                 break
 
     def planning_cluster() -> ClusterSpec:
-        """What policies plan over.  Without chaos: the static spec,
-        verbatim (legacy paths stay bit-exact).  Under chaos: a live
-        view whose per-class capacities track the elastic pools, so
-        replans target the devices that actually exist right now."""
-        if chaos is None:
+        """What policies plan over.  Without chaos or fleets: the static
+        spec, verbatim (legacy paths stay bit-exact).  Under chaos: a
+        live view whose per-class capacities track the elastic pools.
+        With serving fleets: the fleet-held devices are subtracted too,
+        so training replans only target what serving is not using."""
+        if chaos is None and fleets is None:
             return cluster
         if isinstance(backend, ClassPool):
             caps = {dc.name: backend.capacity(dc.name)
                     for dc in cluster.device_classes}
+            if fleets is not None:
+                for name in caps:
+                    caps[name] = max(0, caps[name] - fleets.held(name))
             if all(caps[dc.name] == dc.total_gpus
                    for dc in cluster.device_classes):
                 return cluster
@@ -486,6 +604,8 @@ def execute_runtime(jobs: List[Job], policy: Policy,
                         if caps[dc.name] > 0)
             return dataclasses.replace(cluster, device_classes=dcs)
         cap = backend.capacity()
+        if fleets is not None:
+            cap = max(0, cap - fleets.held())
         if cap == cluster.total_gpus:
             return cluster
         return dataclasses.replace(cluster, nodes=1,
@@ -497,12 +617,15 @@ def execute_runtime(jobs: List[Job], policy: Policy,
         live = state.live_jobs()
         if not live:
             return
+        if fleets is not None and \
+                backend.capacity() - fleets.held() <= 0:
+            return          # serving holds every device: nothing to plan
         # warm-start-capable policies get the previous schedule, the
         # current time and the running set and may re-solve only the
         # residual; the default delegates to plan() unchanged.  Real
         # backends hand over measured step times where observed.
         order = Schedule.coerce(policy.plan_incremental(
-            live, dict(state.remaining), exec_backend.planning_profiles(),
+            live, dict(state.remaining), planning_profiles(),
             planning_cluster(), dict(state.current_assign), prev=order,
             now_s=state.t, running=frozenset(state.running)))
         replans += 1
@@ -627,9 +750,15 @@ def execute_runtime(jobs: List[Job], policy: Policy,
             state.log_run(name, h, t)
         return True
 
+    if fleets is not None:
+        # fleets come up before any training is placed: serving capacity
+        # is carved first, the sweep schedules around it
+        fleets.resize(hooks, 0.0, introspect_every_s)
+
     events = 0
     while q:
-        if finalize_if_done(state.t):
+        if finalize_if_done(state.t) and not (
+                fleets is not None and state.t < fleets.horizon_s):
             break
         ev = q.pop()
         events += 1
@@ -682,7 +811,8 @@ def execute_runtime(jobs: List[Job], policy: Policy,
             state.remaining[ev.job] = 0
             backend.release(h.placement)
             state.log_run(ev.job, h, state.t)
-            if finalize_if_done(state.t):
+            if finalize_if_done(state.t) and not (
+                    fleets is not None and state.t < fleets.horizon_s):
                 break
             if policy.dynamic and policy.replan_on_completion and \
                     state.waiting:
@@ -709,8 +839,22 @@ def execute_runtime(jobs: List[Job], policy: Policy,
             start_fitting()
 
         elif isinstance(ev, IntrospectionTick):
-            if state.all_done():
+            serving_live = fleets is not None and ev.t < fleets.horizon_s
+            if state.all_done() and not serving_live:
+                if fleets is not None:
+                    # advance the clock to the traffic horizon so the
+                    # final fleet teardown replays the full trace
+                    state.t = max(state.t, min(exec_backend.event_time(ev),
+                                               fleets.horizon_s))
                 continue
+            if fleets is not None:
+                # rescale fleets to the coming interval's traffic FIRST:
+                # growth may evict training launches, and the replan
+                # below then plans around the new holdings
+                state.t = exec_backend.event_time(ev)
+                settle(state.t)
+                fleets.plans(planning_profiles())
+                fleets.resize(hooks, state.t, introspect_every_s)
             if not (state.running or state.waiting or state.restarting):
                 # nothing in the system yet (future arrivals pending):
                 # keep the tick chain alive, but there is nothing to
@@ -730,9 +874,14 @@ def execute_runtime(jobs: List[Job], policy: Policy,
             start_fitting()
 
         # deadlock: nothing running, nothing can ever start it (pending
-        # cluster events count — a recovery/grant can restore capacity)
+        # cluster events count — a recovery/grant can restore capacity,
+        # and a serving fleet whose traffic will drop can shrink at a
+        # future introspection tick)
         if state.waiting and not state.running and not state.restarting \
-                and not q.has_any((JobArrival, RestartDone, ClusterEvent)):
+                and not q.has_any((JobArrival, RestartDone, ClusterEvent)) \
+                and not (fleets is not None and fleets.held() > 0
+                         and fleets.can_shrink_later(state.t)
+                         and q.has_any((IntrospectionTick,))):
             raise RuntimeError(
                 f"deadlock: waiting={state.waiting} "
                 f"free={backend.free_gpus} order={order.to_tuples()}")
@@ -741,10 +890,14 @@ def execute_runtime(jobs: List[Job], policy: Policy,
         unfinished = [n for n, v in state.remaining.items() if v > 0]
         raise RuntimeError(f"runtime drained with unfinished jobs: "
                            f"{unfinished}")
+    stats = exec_backend.result_stats()
+    if fleets is not None:
+        fleets.finish(hooks, state.t)
+        stats = dict(stats)
+        stats["serving"] = fleets.stats()
     verify_conservation(state)
     return SimResult(policy.name, state.t, state.gantt, replans, restarts,
-                     failures=failures,
-                     stats=exec_backend.result_stats())
+                     failures=failures, stats=stats)
 
 
 def simulate_runtime(jobs: List[Job], policy: Policy,
@@ -755,16 +908,17 @@ def simulate_runtime(jobs: List[Job], policy: Policy,
                      max_events: int = 100000,
                      backend: Optional[PlacementBackend] = None,
                      exec_backend: Optional[ExecutionBackend] = None,
-                     chaos: Optional[ChaosTrace] = None
-                     ) -> SimResult:
+                     chaos: Optional[ChaosTrace] = None,
+                     fleets=None) -> SimResult:
     """Run ``jobs`` under ``policy`` on the event-driven cluster runtime
     (default execution backend: :class:`SimBackend` in virtual time).
     ``chaos`` injects a :class:`~repro.core.chaos.ChaosTrace` of node
-    failures / spot churn / capacity changes."""
+    failures / spot churn / capacity changes; ``fleets`` runs serving
+    fleets alongside training (see :func:`execute_runtime`)."""
     exec_backend = exec_backend or SimBackend(noise_sigma=noise_sigma,
                                               noise_seed=noise_seed)
     return execute_runtime(jobs, policy, profiles, cluster,
                            exec_backend=exec_backend,
                            introspect_every_s=introspect_every_s,
                            max_events=max_events, backend=backend,
-                           chaos=chaos)
+                           chaos=chaos, fleets=fleets)

@@ -548,7 +548,8 @@ def _solve_time_indexed(jobs: List[Job],
                        n_slots)
     for dc, g_res, until_s in reserved:
         p = pool_idx[dc if dc in budgets else None]
-        k = min(n_slots, max(0, int(math.ceil(until_s / delta - 1e-9))))
+        k = n_slots if not math.isfinite(until_s) else \
+            min(n_slots, max(0, int(math.ceil(until_s / delta - 1e-9))))
         cap_ub[p * n_slots:p * n_slots + k] -= float(g_res)
     np.maximum(cap_ub, 0.0, out=cap_ub)
     reps = dur_all
@@ -639,7 +640,7 @@ _REFINE_MIN_BINARIES = 1000
 
 def _solve_refined(jobs, choice_map, budgets, ub, solver_name, *,
                    n_slots, coarse_slots, time_limit_s, mip_gap,
-                   objective="makespan"):
+                   objective="makespan", reserved=()):
     """Coarse-to-fine: solve on ``coarse_slots`` first, then on the full
     ``n_slots`` grid with each job's starts windowed one coarse slot
     around the incumbent's start — roughly a
@@ -653,14 +654,15 @@ def _solve_refined(jobs, choice_map, budgets, ub, solver_name, *,
         return _solve_time_indexed(
             jobs, choice_map, budgets, ub, solver_name, n_slots=n_slots,
             time_limit_s=time_limit_s, mip_gap=mip_gap,
-            objective=objective)
+            reserved=reserved, objective=objective)
     horizon = max(ub.makespan_s, 1e-6) * 1.05
     # budget split keeps the refined path's TOTAL wall under the dense
     # path's single time limit even when both stages hit their caps
     coarse = _solve_time_indexed(
         jobs, choice_map, budgets, ub, solver_name,
         n_slots=coarse_slots, time_limit_s=0.3 * time_limit_s,
-        mip_gap=mip_gap, horizon=horizon, objective=objective)
+        mip_gap=mip_gap, horizon=horizon, reserved=reserved,
+        objective=objective)
     windows = {a.job: a.start_s for a in coarse.assignments}
     ub2 = coarse if objective_value(coarse.assignments, jobs, objective) \
         < objective_value(ub.assignments, jobs, objective) else ub
@@ -668,7 +670,8 @@ def _solve_refined(jobs, choice_map, budgets, ub, solver_name, *,
         jobs, choice_map, budgets, ub2, solver_name, n_slots=n_slots,
         time_limit_s=0.7 * time_limit_s, mip_gap=mip_gap,
         horizon=horizon, start_windows=windows,
-        window_pad_s=horizon / coarse_slots, objective=objective)
+        window_pad_s=horizon / coarse_slots, reserved=reserved,
+        objective=objective)
 
 
 def solve_joint(jobs: List[Job],
@@ -679,7 +682,8 @@ def solve_joint(jobs: List[Job],
                 mip_gap: float = 0.02,
                 refine: bool = False,
                 coarse_slots: int = 8,
-                objective: str = "makespan") -> Solution:
+                objective: str = "makespan",
+                reserved: Iterable[Tuple] = ()) -> Solution:
     """The joint MILP.  Falls back to greedy on infeasibility/timeout.
 
     ``refine=True`` enables the coarse-to-fine pass (solve on
@@ -688,23 +692,29 @@ def solve_joint(jobs: List[Job],
 
     ``objective`` selects what the MILP minimizes (see ``OBJECTIVES``);
     the default reproduces the paper's makespan formulation.
+
+    ``reserved`` pre-loads ``(class_or_None, gpus, release_s)`` capacity
+    reservations the plan must schedule around — running jobs an
+    incremental replan keeps, or serving-fleet allocations (see
+    :func:`repro.serving.fleet.fleet_reservations`).
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}; "
                          f"expected one of {OBJECTIVES}")
+    reserved = list(reserved)
     choice_map = pooled_choice_map(jobs, profiles)
     ub = greedy_schedule(jobs, choice_map, total_gpus,
-                         objective=objective)
+                         reserved=reserved, objective=objective)
     budgets = {None: int(total_gpus)}
     if refine:
         return _solve_refined(jobs, choice_map, budgets, ub, "milp",
                               n_slots=n_slots, coarse_slots=coarse_slots,
                               time_limit_s=time_limit_s, mip_gap=mip_gap,
-                              objective=objective)
+                              reserved=reserved, objective=objective)
     return _solve_time_indexed(jobs, choice_map, budgets,
                                ub, "milp", n_slots=n_slots,
                                time_limit_s=time_limit_s, mip_gap=mip_gap,
-                               objective=objective)
+                               reserved=reserved, objective=objective)
 
 
 def solve_joint_classes(jobs: List[Job], profiles, cluster, *,
@@ -713,7 +723,8 @@ def solve_joint_classes(jobs: List[Job], profiles, cluster, *,
                         mip_gap: float = 0.05,
                         refine: bool = False,
                         coarse_slots: int = 8,
-                        objective: str = "makespan") -> Solution:
+                        objective: str = "makespan",
+                        reserved: Iterable[Tuple] = ()) -> Solution:
     """Device-class-aware joint MILP for heterogeneous clusters.
 
     A job's config space is the union over device classes of its
@@ -724,24 +735,57 @@ def solve_joint_classes(jobs: List[Job], profiles, cluster, *,
     now picks *which* class as well as *how many* GPUs.  Assignments
     carry the chosen class, which the runtime's ClassPool placement pins.
 
+    ``reserved`` pre-loads ``(class, gpus, release_s)`` reservations —
+    running jobs kept by a replan, or serving-fleet holdings.
+
     Falls back to a per-class-budget greedy on infeasibility/timeout.
     """
     if objective not in OBJECTIVES:
         raise ValueError(f"unknown objective {objective!r}; "
                          f"expected one of {OBJECTIVES}")
+    reserved = list(reserved)
     choice_map, budgets = class_choice_map(jobs, profiles,
                                            cluster.device_classes)
-    ub = greedy_schedule(jobs, choice_map, budgets, objective=objective)
+    ub = greedy_schedule(jobs, choice_map, budgets, reserved=reserved,
+                         objective=objective)
     if refine:
         return _solve_refined(jobs, choice_map, budgets, ub,
                               "milp-classes", n_slots=n_slots,
                               coarse_slots=coarse_slots,
                               time_limit_s=time_limit_s, mip_gap=mip_gap,
-                              objective=objective)
+                              reserved=reserved, objective=objective)
     return _solve_time_indexed(jobs, choice_map, budgets, ub,
                                "milp-classes", n_slots=n_slots,
                                time_limit_s=time_limit_s, mip_gap=mip_gap,
-                               objective=objective)
+                               reserved=reserved, objective=objective)
+
+
+def solve_joint_serving(jobs: List[Job], serves, profiles, cluster, *,
+                        window_s: float, horizon_s: float,
+                        util_cap: float = 0.7,
+                        **solver_kw) -> Tuple[Solution, dict]:
+    """The joint train+serve plan: size every serving fleet under its
+    latency SLO first (device class + per-window replica counts from the
+    measured throughput curves — :func:`repro.serving.fleet.plan_fleets`),
+    convert the fleets into capacity reservations, and solve the
+    training MILP around them.
+
+    Returns ``(solution, fleet_plans)``.  ``profiles`` must answer both
+    training keys and ``(name, "serve", class, gpus)`` serve keys (see
+    :func:`repro.serving.fleet.serve_profiles` and
+    :class:`repro.core.perfmodel.MergedProfiles`).
+    """
+    from ..serving.fleet import fleet_reservations, plan_fleets
+    plans = plan_fleets(serves, profiles, cluster, window_s=window_s,
+                        horizon_s=horizon_s, util_cap=util_cap)
+    reserved = fleet_reservations(plans)
+    if cluster.hetero:
+        sol = solve_joint_classes(jobs, profiles, cluster,
+                                  reserved=reserved, **solver_kw)
+    else:
+        sol = solve_joint(jobs, profiles, cluster.total_gpus,
+                          reserved=reserved, **solver_kw)
+    return sol, plans
 
 
 # --------------------------------------------- warm-started incremental

@@ -14,6 +14,7 @@ and what the decode_32k / long_500k dry-run shapes exercise at scale.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -61,6 +62,7 @@ class ContinuousBatchingEngine:
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.steps = 0
+        self._t0: Optional[float] = None   # engine epoch: first run() call
         opts = opts or {}
         # exact per-leaf batch axis: diff the state spec at two batch
         # sizes (a leading layer-stack dim can coincide with `slots`)
@@ -95,15 +97,33 @@ class ContinuousBatchingEngine:
 
     # ------------------------------------------------------------ public
     def submit(self, req: Request):
-        self.queue.append(req)
+        """Queue ``req`` for admission.  Requests are admitted in
+        ``arrival_s`` order, ties broken by submission order — so a
+        batch of same-timestamp requests drains FIFO instead of in
+        whatever order a caller's dict happened to iterate.  An
+        infeasible request (prompt + generation budget beyond the cache)
+        is rejected HERE, not mid-run when its turn comes up and the
+        engine has already served everything admitted before it."""
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(f"request {req.rid} exceeds max_len "
+                             f"({len(req.prompt)} + {req.max_new_tokens} "
+                             f"> {self.max_len})")
+        # insort_right keeps equal-arrival requests in submission order
+        bisect.insort_right(self.queue, req, key=lambda r: r.arrival_s)
 
     def run(self, max_steps: int = 10000) -> List[Request]:
-        """Run until queue + slots drain.  Returns finished requests."""
-        t0 = time.perf_counter()
+        """Run until queue + slots drain.  Returns finished requests.
+
+        The engine clock starts at the FIRST ``run()`` call and persists
+        across calls: a request finishing in a second ``run()`` gets a
+        ``done_s`` after everything from the first, instead of the clock
+        silently restarting at zero."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
         while (self.queue or any(not s.free for s in self.slots)) \
                 and self.steps < max_steps:
             self._admit()
-            self._engine_step(t0)
+            self._engine_step(self._t0)
         return self.finished
 
     def throughput(self) -> Dict[str, float]:
@@ -114,6 +134,8 @@ class ContinuousBatchingEngine:
         return {"requests": len(self.finished), "tokens": toks,
                 "steps": self.steps,
                 "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+                "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
+                "p99_latency_s": float(np.percentile(lat, 99)) if lat else 0.0,
                 "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0}
 
     # ----------------------------------------------------------- private
@@ -121,8 +143,6 @@ class ContinuousBatchingEngine:
         for b, slot in enumerate(self.slots):
             if slot.free and self.queue:
                 req = self.queue.pop(0)
-                if len(req.prompt) + req.max_new_tokens > self.max_len:
-                    raise ValueError(f"request {req.rid} exceeds max_len")
                 slot.req = req
                 slot.prompt_left = len(req.prompt)
                 # reset this slot's cache position

@@ -1,0 +1,68 @@
+"""Measure real continuous-batching serve step times.
+
+The fleet planner (:mod:`repro.serving.fleet`) sizes replica fleets
+from one number per (model, device class): the wall time of ONE batched
+decode step with the slots full.  This module produces that number by
+actually running a :class:`~repro.serving.engine.ContinuousBatchingEngine`
+on this process's JAX devices — the serving-side analogue of the
+training profiler's measured step times, and what
+``LocalJaxBackend.serve_step_time`` feeds back through
+``ObservedProfiles`` so replans plan over reality instead of the
+analytic estimate.
+
+The measurement excludes the JIT compile (a warm-up request triggers
+it) and saturates every slot so the step time reflects the batched
+regime the queueing model assumes.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..models.config import ModelConfig
+
+
+def measure_serve_step_time(cfg: ModelConfig, *, slots: int = 4,
+                            max_len: int = 32, prompt_len: int = 4,
+                            new_tokens: int = 8, seed: int = 0,
+                            reduce_model: bool = True) -> float:
+    """Wall seconds per batched decode step, slots saturated.
+
+    Builds the (reduced, by default) model, warms the compile with a
+    throwaway request, then times a burst of ``2 * slots`` requests so
+    every slot stays busy and refills at least once.  ``prompt_len`` /
+    ``new_tokens`` only set how many steps get sampled — the per-step
+    time is what matters, so they are kept small for measurement speed.
+    """
+    import jax
+
+    from ..models.transformer import init_model
+    from .engine import ContinuousBatchingEngine, Request
+
+    if reduce_model:
+        cfg = cfg.reduced()
+    prompt_len = max(1, min(prompt_len, max_len - new_tokens - 1))
+    params = init_model(cfg, jax.random.PRNGKey(seed))
+    eng = ContinuousBatchingEngine(cfg, params, slots=slots,
+                                   max_len=max_len)
+    rng = np.random.RandomState(seed)
+
+    def mk(rid):
+        return Request(rid=rid,
+                       prompt=rng.randint(0, cfg.vocab_size,
+                                          prompt_len).tolist(),
+                       max_new_tokens=new_tokens)
+
+    eng.submit(mk(-1))          # compile warm-up, not timed
+    eng.run()
+    steps0 = eng.steps
+    for i in range(2 * slots):
+        eng.submit(mk(i))
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    n = eng.steps - steps0
+    if n <= 0:
+        raise RuntimeError("serve measurement ran zero engine steps")
+    return dt / n

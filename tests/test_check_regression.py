@@ -1,0 +1,99 @@
+"""Unit tests for the CI bench regression gate
+(benchmarks/check_regression.py): the relative gate, per-metric
+tolerance overrides, absolute ceilings/floors (including on fresh-only
+paths), and nested collect() flattening."""
+import importlib.util
+import json
+import os
+import sys
+
+
+_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "check_regression.py")
+_spec = importlib.util.spec_from_file_location("check_regression", _PATH)
+cr = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cr)
+
+
+def _run(tmp_path, base, fresh, tolerance=None, monkeypatch=None):
+    b = tmp_path / "base.json"
+    f = tmp_path / "fresh.json"
+    b.write_text(json.dumps(base))
+    f.write_text(json.dumps(fresh))
+    argv = ["check_regression", "--baseline", str(b), "--fresh", str(f)]
+    if tolerance is not None:
+        argv += ["--tolerance", str(tolerance)]
+    monkeypatch.setattr(sys, "argv", argv)
+    return cr.main()
+
+
+def test_collect_flattens_nested_gated_metrics():
+    doc = {"quick": True,
+           "scenarios": {"flat": {"saturn_s": 10.0, "bench_wall_s": 3.0},
+                         "deep": {"inner": {"current_practice_s": 5.0}}},
+           "serve_attainment": 0.995}
+    out = cr.collect(doc)
+    assert out["scenarios.flat.saturn_s"] == ("saturn_s", 10.0)
+    assert out["scenarios.deep.inner.current_practice_s"] == \
+        ("current_practice_s", 5.0)
+    assert out["serve_attainment"] == ("serve_attainment", 0.995)
+    # ungated fields (wall clock, flags) never enter the gate
+    assert not any("bench_wall_s" in k or "quick" in k for k in out)
+
+
+def test_relative_gate_passes_within_tolerance(tmp_path, monkeypatch):
+    base = {"s": {"saturn_s": 100.0}}
+    assert _run(tmp_path, base, {"s": {"saturn_s": 109.0}},
+                monkeypatch=monkeypatch) == 0
+    assert _run(tmp_path, base, {"s": {"saturn_s": 112.0}},
+                monkeypatch=monkeypatch) == 1
+    # improvement is always fine
+    assert _run(tmp_path, base, {"s": {"saturn_s": 50.0}},
+                monkeypatch=monkeypatch) == 0
+
+
+def test_missing_fresh_metric_fails(tmp_path, monkeypatch):
+    base = {"s": {"saturn_s": 100.0}}
+    assert _run(tmp_path, base, {"s": {}}, monkeypatch=monkeypatch) == 1
+    # ...but a NEW fresh relative metric does not break the gate
+    assert _run(tmp_path, base,
+                {"s": {"saturn_s": 100.0, "makespan_aware_s": 1.0}},
+                monkeypatch=monkeypatch) == 0
+
+
+def test_tolerance_override_beats_cli_tolerance(tmp_path, monkeypatch):
+    # wall_refined_over_dense has a 150% override: 2.4x the baseline
+    # passes even with a tight --tolerance
+    base = {"wall_refined_over_dense": 1.0}
+    assert _run(tmp_path, base, {"wall_refined_over_dense": 2.4},
+                tolerance=0.01, monkeypatch=monkeypatch) == 0
+    assert _run(tmp_path, base, {"wall_refined_over_dense": 2.6},
+                tolerance=0.01, monkeypatch=monkeypatch) == 1
+
+
+def test_absolute_ceiling_and_floor(tmp_path, monkeypatch):
+    base = {"roofline_err_median": 0.05, "serve_attainment": 1.0}
+    ok = {"roofline_err_median": 0.10, "serve_attainment": 0.995}
+    assert _run(tmp_path, base, ok, monkeypatch=monkeypatch) == 0
+    # the ceiling is absolute: half the baseline's headroom is
+    # irrelevant, 0.16 > 0.15 fails
+    bad = {"roofline_err_median": 0.16, "serve_attainment": 1.0}
+    assert _run(tmp_path, base, bad, monkeypatch=monkeypatch) == 1
+    bad = {"roofline_err_median": 0.05, "serve_attainment": 0.98}
+    assert _run(tmp_path, base, bad, monkeypatch=monkeypatch) == 1
+
+
+def test_absolute_gates_apply_to_fresh_only_paths(tmp_path, monkeypatch):
+    """A brand-new scenario cannot dodge its fixed floor just because
+    the committed baseline predates it."""
+    base = {"s": {"saturn_s": 10.0}}
+    fresh = {"s": {"saturn_s": 10.0},
+             "new_scenario": {"static_over_saturn_x": 1.1}}
+    assert _run(tmp_path, base, fresh, monkeypatch=monkeypatch) == 1
+    fresh["new_scenario"]["static_over_saturn_x"] = 1.3
+    assert _run(tmp_path, base, fresh, monkeypatch=monkeypatch) == 0
+
+
+def test_empty_baseline_skips(tmp_path, monkeypatch):
+    assert _run(tmp_path, {"only": {"bench_wall_s": 1.0}},
+                {"s": {"saturn_s": 5.0}}, monkeypatch=monkeypatch) == 0

@@ -1,0 +1,230 @@
+"""SLO-aware serving fleets: sizing math, the queueing model, the
+class-choice planner, solver reservations, and the full runtime
+integration (fleets sharing a cluster with training jobs)."""
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.baselines import (CurrentPractice, SaturnPolicy,
+                                  static_partition_fleets)
+from repro.core.executor import simulate
+from repro.core.job import (SERVE_TECH, ClusterSpec, DeviceClass, Job,
+                            ServeJob)
+from repro.core.profiler import Profile
+from repro.core.solver import solve_joint_serving
+from repro.data.traffic import bursty_trace, diurnal_trace
+from repro.serving.fleet import (FleetManager, fleet_reservations,
+                                 plan_fleet, required_replicas,
+                                 serve_profiles, simulate_fleet,
+                                 window_stats)
+
+CFG = get_config("xlstm-125m").reduced()
+
+
+def _cluster(gpus=8, extra=()):
+    classes = (DeviceClass("a100", nodes=1, gpus_per_node=gpus,
+                           hbm_per_gpu=40e9, speed_hint=1.0),) + extra
+    return ClusterSpec(device_classes=classes)
+
+
+def _serve(**kw):
+    kw.setdefault("name", "svc")
+    kw.setdefault("cfg", CFG)
+    kw.setdefault("slo_p99_s", 1.0)
+    kw.setdefault("slots", 4)
+    kw.setdefault("gpus_per_replica", 1)
+    return ServeJob(**kw)
+
+
+def _train_profiles(jobs, counts=(1, 2, 4), base=0.4):
+    return {(j.name, "ddp", "a100", g):
+            Profile(j.name, "ddp", g, base / g ** 0.9, 1e9, True, "t",
+                    device_class="a100")
+            for j in jobs for g in counts}
+
+
+# ------------------------------------------------------------- unit level
+
+def test_required_replicas_monotone():
+    s = _serve()
+    st = 0.002
+    reps = [required_replicas(s, st, r) for r in (0.0, 1.0, 5.0, 20.0, 80.0)]
+    assert reps == sorted(reps)
+    assert reps[0] == 1
+    # doubling the step time can only need more replicas
+    assert required_replicas(s, 2 * st, 20.0) >= required_replicas(
+        s, st, 20.0)
+
+
+def test_simulate_fleet_idle_and_queueing():
+    # 1 server, deterministic 1s service, back-to-back arrivals queue
+    lat = simulate_fleet([0.0, 0.0, 0.0], 1.0, [(0.0, 1)])
+    assert lat == [1.0, 2.0, 3.0]
+    # 3 servers: all parallel
+    lat = simulate_fleet([0.0, 0.0, 0.0], 1.0, [(0.0, 3)])
+    assert lat == [1.0, 1.0, 1.0]
+    # no capacity until t=5: the request waits for the grow
+    lat = simulate_fleet([1.0], 1.0, [(0.0, 0), (5.0, 1)])
+    assert lat == [5.0]
+    # never any capacity again: unserveable
+    lat = simulate_fleet([1.0], 1.0, [(0.0, 1), (0.5, 0)])
+    assert lat == [math.inf]
+
+
+def test_window_stats_attainment():
+    stats = window_stats([0.0, 1.0, 10.0], [0.5, 2.0, 0.5], 1.0, 5.0, 15.0)
+    assert stats["requests"] == 3
+    assert stats["attainment"] == pytest.approx(2 / 3)
+    assert len(stats["windows"]) == 3
+    assert stats["windows"][1]["requests"] == 0
+    assert stats["windows"][0]["attainment"] == pytest.approx(0.5)
+
+
+def test_plan_fleet_prefers_cheapest_class():
+    """A slow-but-sufficient class wins over a fast one (keeping fast
+    GPUs for training); an SLO only the fast class meets flips it."""
+    cluster = _cluster(extra=(
+        DeviceClass("v100", nodes=1, gpus_per_node=8,
+                    hbm_per_gpu=16e9, speed_hint=0.5),))
+    serve = _serve(slo_p99_s=3.0, trace=diurnal_trace(2.0, 600.0, seed=0))
+    profiles = serve_profiles([serve], cluster, base_step_s=0.004)
+    plan = plan_fleet(serve, profiles, cluster, window_s=60.0,
+                      horizon_s=600.0)
+    assert plan.device_class == "v100"   # half speed still meets 3s SLO
+    # a100 service time is 128 tokens * 2ms = 0.256s, v100 twice that:
+    # a 0.6s SLO (0.36s budget at SERVICE_SLO_FRAC) only a100 meets
+    tight = _serve(slo_p99_s=0.6, trace=serve.trace)
+    profiles = serve_profiles([tight], cluster, base_step_s=0.004)
+    plan = plan_fleet(tight, profiles, cluster, window_s=60.0,
+                      horizon_s=600.0)
+    assert plan.device_class == "a100"
+    hopeless = _serve(slo_p99_s=0.01, trace=serve.trace)
+    profiles = serve_profiles([hopeless], cluster, base_step_s=0.004)
+    with pytest.raises(ValueError):
+        plan_fleet(hopeless, profiles, cluster, window_s=60.0,
+                   horizon_s=600.0)
+
+
+def test_fleet_reservations_envelope():
+    cluster = _cluster()
+    serve = _serve(slo_p99_s=2.0,
+                   trace=bursty_trace(1.0, 600.0, seed=0, burst_rps=25.0,
+                                      burst_every_s=600.0,
+                                      burst_len_s=120.0))
+    profiles = serve_profiles([serve], cluster, base_step_s=0.004)
+    plan = plan_fleet(serve, profiles, cluster, window_s=60.0,
+                      horizon_s=600.0)
+    res = fleet_reservations({"svc": plan})
+    # one permanent triple plus step-downs; total equals the peak
+    assert sum(1 for _, _, until in res if until == math.inf) == 1
+    assert sum(g for _, g, _ in res) == plan.peak_gpus
+    assert all(dc == "a100" for dc, _, _ in res)
+    # the burst is at the START, so capacity steps DOWN over the horizon
+    assert any(math.isfinite(until) for _, _, until in res)
+
+
+def test_solve_joint_serving_reserves_capacity():
+    """Training packs around the fleet: peak reservation shrinks the
+    GPUs the MILP may use at t=0."""
+    cluster = _cluster()
+    jobs = [Job(f"t{i}", CFG, 8, 64, total_steps=100) for i in range(2)]
+    profiles = _train_profiles(jobs)
+    serve = _serve(slo_p99_s=2.0,
+                   trace=bursty_trace(4.0, 600.0, seed=0, burst_rps=25.0,
+                                      burst_every_s=300.0,
+                                      burst_len_s=120.0))
+    merged = dict(profiles)
+    merged.update(serve_profiles([serve], cluster, base_step_s=0.004))
+    sol, plans = solve_joint_serving(jobs, [serve], merged, cluster,
+                                     window_s=60.0, horizon_s=600.0,
+                                     time_limit_s=5)
+    assert plans["svc"].peak_gpus >= 1
+    assert math.isfinite(sol.makespan_s)
+    base = solve_joint_serving(jobs, [], merged, cluster, window_s=60.0,
+                               horizon_s=600.0, time_limit_s=5)[0]
+    assert sol.makespan_s >= base.makespan_s - 1e-9
+
+
+# ------------------------------------------------------ runtime integration
+
+def _mixed_run(adaptive, n_jobs=3, horizon=600.0, slo=1.0, steps=800):
+    cluster = _cluster()
+    jobs = [Job(f"t{i}", CFG, 8, 64, total_steps=steps, seed=i)
+            for i in range(n_jobs)]
+    profiles = _train_profiles(jobs)
+    trace = bursty_trace(2.0, horizon, seed=1, burst_rps=25.0,
+                         burst_every_s=horizon / 2, burst_len_s=120.0)
+    serve = _serve(slo_p99_s=slo, trace=trace)
+    merged = dict(profiles)
+    merged.update(serve_profiles([serve], cluster, base_step_s=0.004))
+    if adaptive:
+        fm = FleetManager([serve], cluster, window_s=60.0,
+                          horizon_s=horizon)
+        policy = SaturnPolicy(time_limit_s=5)
+    else:
+        fm = static_partition_fleets([serve], cluster, window_s=60.0,
+                                     horizon_s=horizon)
+        policy = CurrentPractice()
+    res = simulate(jobs, policy, merged, cluster,
+                   introspect_every_s=60.0, fleets=fm)
+    return res, fm
+
+
+def test_runtime_serving_stats_and_slo():
+    res, fm = _mixed_run(adaptive=True)
+    sv = res.stats["serving"]
+    svc = sv["svc"]
+    assert svc["requests"] > 0
+    assert svc["attainment"] >= 0.99
+    assert svc["device_class"] == "a100"
+    assert math.isfinite(svc["step_time_s"])     # measured, fed back
+    assert fm.observed                           # ObservedProfiles overlay
+    # run stays alive through the traffic horizon even after training
+    assert res.makespan_s >= fm.horizon_s - 60.0
+    # serving segments are real Gantt entries under conservation
+    serve_segs = [e for e in res.gantt
+                  if e.kind == "run" and e.technique == SERVE_TECH]
+    assert serve_segs and all(e.job == "svc" for e in serve_segs)
+
+
+def test_adaptive_fleet_rescales_and_beats_static():
+    adaptive, _ = _mixed_run(adaptive=True)
+    static, _ = _mixed_run(adaptive=False)
+
+    def train_end(res):
+        return max(e.end_s for e in res.gantt
+                   if e.kind == "run" and e.technique != SERVE_TECH)
+
+    sizes_a = {n for _, n in adaptive.stats["serving"]["svc"]["history"]}
+    # the adaptive fleet really changes size (burst vs quiet windows)
+    assert len(sizes_a - {0}) >= 2
+    sizes_s = [n for t, n in static.stats["serving"]["svc"]["history"]
+               if 0 < t < 500.0]
+    # the static fleet never scales DOWN from its provisioned peak
+    assert sizes_s == sorted(sizes_s)
+    assert static.stats["serving"]["svc"]["attainment"] >= 0.99
+    assert train_end(adaptive) < train_end(static)
+
+
+def test_fleet_growth_evicts_training():
+    """A burst landing mid-sweep evicts training launches (restart
+    penalty paid) rather than missing the SLO."""
+    # enough training work that the sweep still holds the cluster when
+    # the t=300s burst lands — growth must evict, not find free GPUs
+    res, fm = _mixed_run(adaptive=True, n_jobs=4, steps=3000)
+    assert fm.evictions >= 1
+    assert res.restarts >= fm.evictions
+    assert res.stats["serving"]["svc"]["attainment"] >= 0.99
+
+
+def test_infeasible_slo_raises():
+    cluster = _cluster()
+    serve = _serve(slo_p99_s=0.001, trace=diurnal_trace(1.0, 300.0, seed=0))
+    jobs = [Job("t0", CFG, 8, 64, total_steps=50)]
+    merged = dict(_train_profiles(jobs))
+    merged.update(serve_profiles([serve], cluster))
+    fm = FleetManager([serve], cluster, window_s=60.0, horizon_s=300.0)
+    with pytest.raises(ValueError):
+        simulate(jobs, SaturnPolicy(time_limit_s=5), merged, cluster,
+                 introspect_every_s=60.0, fleets=fm)

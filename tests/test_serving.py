@@ -71,9 +71,48 @@ def test_engine_accounting():
 
 
 def test_oversized_request_rejected():
+    """An infeasible request is rejected at submit(), before it can
+    stall a run that has already served everything ahead of it."""
     cfg = get_config("gemma3-4b").reduced()
     params = init_model(cfg, jax.random.PRNGKey(0))
     eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=8)
-    eng.submit(Request(rid=0, prompt=[1] * 6, max_new_tokens=6))
     with pytest.raises(ValueError):
-        eng.run()
+        eng.submit(Request(rid=0, prompt=[1] * 6, max_new_tokens=6))
+    assert not eng.queue
+
+
+def test_admission_order_stable():
+    """Admission follows arrival_s, with equal timestamps drained in
+    submission order (not submission order ignoring arrival_s)."""
+    cfg = get_config("xlstm-125m").reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=32)
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2,
+                       arrival_s=5.0))
+    eng.submit(Request(rid=1, prompt=[3, 4], max_new_tokens=2,
+                       arrival_s=1.0))
+    eng.submit(Request(rid=2, prompt=[5, 6], max_new_tokens=2,
+                       arrival_s=1.0))
+    assert [r.rid for r in eng.queue] == [1, 2, 0]
+    done = eng.run()
+    # slots=1 => strictly sequential completion in admission order
+    order = sorted(done, key=lambda r: r.done_s)
+    assert [r.rid for r in order] == [1, 2, 0]
+
+
+def test_engine_clock_persists_across_runs():
+    """A second run() continues the engine clock: its completions are
+    timestamped after the first run's, not restarted from zero."""
+    cfg = get_config("xlstm-125m").reduced()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    eng = ContinuousBatchingEngine(cfg, params, slots=1, max_len=32)
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=3))
+    eng.run()
+    first_done = eng.finished[-1].done_s
+    eng.submit(Request(rid=1, prompt=[3, 4], max_new_tokens=3))
+    eng.run()
+    assert eng.finished[-1].rid == 1
+    assert eng.finished[-1].done_s > first_done
+    th = eng.throughput()
+    assert th["requests"] == 2
+    assert th["p99_latency_s"] >= th["p50_latency_s"] > 0.0

@@ -1,0 +1,74 @@
+"""Traffic generators: seed-determinism and the Poisson-thinning
+superset property (mirroring chaos.poisson_node_failures) — at a shared
+seed and rate cap, a higher-rate trace contains every arrival of a
+lower-rate one, so rate sweeps are paired comparisons, not re-rolls."""
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.data.traffic import bursty_trace, diurnal_trace, window_rates
+
+
+def test_seed_determinism():
+    a = diurnal_trace(3.0, 3600.0, seed=7)
+    b = diurnal_trace(3.0, 3600.0, seed=7)
+    assert a == b
+    c = bursty_trace(2.0, 3600.0, seed=7, burst_rps=10.0)
+    d = bursty_trace(2.0, 3600.0, seed=7, burst_rps=10.0)
+    assert c == d
+    assert diurnal_trace(3.0, 3600.0, seed=8) != a
+
+
+def test_traces_sorted_in_range():
+    for tr in (diurnal_trace(5.0, 1800.0, seed=0),
+               bursty_trace(2.0, 1800.0, seed=0)):
+        assert list(tr) == sorted(tr)
+        assert all(0.0 <= t < 1800.0 for t in tr)
+        assert len(tr) > 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 50), lo=st.integers(1, 5), hi=st.integers(6, 12))
+def test_diurnal_rate_superset(seed, lo, hi):
+    """Same seed + same cap: every arrival at mean rate ``lo`` appears
+    at mean rate ``hi`` too."""
+    cap = 2.0 * hi          # shared cap >= both peaks (amplitude 0.5)
+    a = set(diurnal_trace(float(lo), 1800.0, seed=seed, max_rps=cap))
+    b = set(diurnal_trace(float(hi), 1800.0, seed=seed, max_rps=cap))
+    assert a <= b
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 50), base=st.integers(1, 4))
+def test_bursty_rate_superset(seed, base):
+    cap = 40.0
+    a = set(bursty_trace(float(base), 1800.0, seed=seed, burst_rps=10.0,
+                         max_rps=cap))
+    b = set(bursty_trace(float(base + 2), 1800.0, seed=seed,
+                         burst_rps=30.0, max_rps=cap))
+    assert a <= b
+
+
+def test_diurnal_validates_amplitude_and_cap():
+    with pytest.raises(ValueError):
+        diurnal_trace(3.0, 600.0, amplitude=1.5)
+    with pytest.raises(ValueError):
+        # peak 4.5 rps exceeds the declared cap
+        diurnal_trace(3.0, 600.0, max_rps=4.0)
+
+
+def test_bursty_mean_rates_land_in_windows():
+    """Burst windows must carry visibly more arrivals than quiet ones."""
+    tr = bursty_trace(1.0, 3600.0, seed=3, burst_rps=20.0,
+                      burst_every_s=1800.0, burst_len_s=300.0)
+    rates = window_rates(tr, 300.0, 3600.0)
+    assert len(rates) == 12
+    # bursts occupy windows 0 and 6 (t in [0,300) and [1800,2100))
+    quiet = [r for i, r in enumerate(rates) if i not in (0, 6)]
+    assert min(rates[0], rates[6]) > 3 * max(quiet)
+
+
+def test_window_rates_conserves_requests():
+    tr = diurnal_trace(4.0, 1200.0, seed=5)
+    rates = window_rates(tr, 100.0, 1200.0)
+    assert sum(r * 100.0 for r in rates) == pytest.approx(len(tr))
