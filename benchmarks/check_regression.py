@@ -60,6 +60,12 @@ GATED_METRICS = (
 ABSOLUTE_MAX = {
     "roofline_err_median": 0.15,
     "makespan_roofline_delta_pct": 10.0,
+    # BENCH_recover.json (fault-tolerant process backend): recovery
+    # from injected faults must reproduce the uninterrupted loss
+    # trajectory (exact replay — any real divergence is orders of
+    # magnitude above this ceiling) at bounded makespan overhead
+    "recover_traj_err": 1e-6,
+    "recover_overhead_x": 4.0,
 }
 
 # fixed-floor gates (higher is better): fresh < limit fails
@@ -69,6 +75,11 @@ ABSOLUTE_MIN = {
     # SLO, and adaptive sharing beats the static partition by a margin
     "serve_attainment": 0.99,
     "static_over_saturn_x": 1.2,
+    # BENCH_recover.json: every injected-fault scenario completes
+    # un-quarantined, and the zero-budget scenario records its
+    # quarantine instead of deadlocking
+    "recover_completes": 1.0,
+    "quarantine_recorded": 1.0,
 }
 
 # per-metric tolerance overrides (take precedence over --tolerance):

@@ -16,7 +16,10 @@ writes BENCH_e2e.json (sim-vs-real makespan fidelity + a real
 checkpointed preempt/resume); ``chaos`` sweeps seeded failure rates
 over the elastic runtime (Saturn-with-replanning vs static baselines,
 plus spot churn on a mixed fleet and the non-makespan objectives) and
-writes BENCH_chaos.json; ``--quick`` is the CI smoke variant.  Prints ``name,us_per_call,derived`` CSV rows (harness
+writes BENCH_chaos.json; ``recover`` injects real worker faults
+(SIGKILL / stalled heartbeats / truncated checkpoints) into the
+multi-process ProcessJaxBackend and gates bit-exact crash recovery,
+writing BENCH_recover.json; ``--quick`` is the CI smoke variant.  Prints ``name,us_per_call,derived`` CSV rows (harness
 contract) followed by human-readable tables.  Results also land in
 results/*.json.
 """
@@ -783,6 +786,135 @@ def bench_e2e(quick=False):
     return out
 
 
+# ------------------------------------------------------- crash recovery
+
+def bench_recover(quick=False):
+    """Fault-tolerant execution benchmark: really training worker
+    PROCESSES are really hurt (SIGKILL mid-step, stalled heartbeats, a
+    truncated checkpoint file) and the ProcessJaxBackend's supervision
+    must detect each fault, salvage the durable checkpoint, relaunch
+    under backoff, and finish the job with the EXACT loss trajectory of
+    an uninterrupted run — recovery that drops or perturbs steps cannot
+    hide.  A zero-budget scenario checks the quarantine path: the run
+    completes with the failure recorded instead of deadlocking.
+
+    Gates (check_regression): ``recover_traj_err`` (absolute ceiling —
+    the resumed trajectory must match the uninterrupted one),
+    ``recover_overhead_x`` (recovery makespan over baseline, bounded),
+    ``recover_completes`` / ``quarantine_recorded`` (absolute floors).
+    Writes BENCH_recover.json (repo root)."""
+    import dataclasses
+    import tempfile
+
+    from repro.configs import get_config
+    from repro.core.baselines import CurrentPractice
+    from repro.core.chaos import ChaosTrace, RetryPolicy, WorkerFault
+    from repro.core.executor import simulate
+    from repro.core.job import ClusterSpec, Job
+    from repro.core.process_backend import ProcessJaxBackend
+    from repro.core.profiler import Profile
+
+    t_bench = time.time()
+    cfg = dataclasses.replace(
+        get_config("xlstm-125m").reduced(), d_model=64, num_heads=2,
+        num_kv_heads=2, head_dim=32, name="xlstm-micro")
+    steps = 400 if quick else 1000
+    # the fault event arrives early and DEFERS (WorkerFault.min_step)
+    # until the worker's first durable checkpoint at/past min_step:
+    # a mid-run strike is guaranteed regardless of machine-load-
+    # dependent worker startup time (spawn + jax import + compile)
+    fault_t = 1.0
+    min_step = 20     # the SECOND durable commit (ckpt_every_steps=10):
+                      # the corrupt fault then has a `.prev`
+                      # last-known-good to fall back to
+    cluster = ClusterSpec(nodes=1, gpus_per_node=1, restart_cost_s=0.5)
+    jobs = [Job("j0", cfg, 2, 32, total_steps=steps, lr=1e-3, seed=0)]
+    profiles = {("j0", "ddp", 1): Profile("j0", "ddp", 1, 0.01, 1e9,
+                                          True, "t")}
+
+    def run(chaos=None, **backend_kw):
+        be = ProcessJaxBackend(ckpt_dir=tempfile.mkdtemp(),
+                               ckpt_every_steps=10, **backend_kw)
+        t0 = time.time()
+        res = simulate(jobs, CurrentPractice(), profiles, cluster,
+                       exec_backend=be, chaos=chaos)
+        return res, time.time() - t0
+
+    def trajectory(res):
+        d = {}   # absolute step -> loss; replayed steps overwrite
+        for s, v in res.stats["j0"]["losses"]:
+            d[s] = v
+        return d
+
+    base, wall_base = run()
+    t_base = trajectory(base)
+    assert base.worker_failures == 0 and not base.quarantined
+    emit("recover_baseline", wall_base * 1e6,
+         f"steps={steps} makespan={base.makespan_s:.1f}s")
+
+    scenarios = {}
+    worst_err, worst_overhead, completed = 0.0, 0.0, 0
+    for kind in ("sigkill", "hang", "corrupt"):
+        res, wall = run(ChaosTrace((WorkerFault(fault_t, kind, "j0",
+                                                min_step=min_step),)))
+        t_f = trajectory(res)
+        ok = (res.worker_failures >= 1 and not res.quarantined
+              and set(t_f) == set(t_base))
+        err = max(abs(t_base[s] - t_f[s]) for s in t_base) if ok \
+            else float("inf")
+        overhead = res.makespan_s / base.makespan_s
+        completed += int(ok)
+        worst_err = max(worst_err, err)
+        worst_overhead = max(worst_overhead, overhead)
+        segs = res.stats["j0"]["segments"]
+        scenarios[kind] = {
+            "worker_failures": res.worker_failures,
+            "restarts": res.restarts,
+            "segments": len(segs),
+            "resumed_step": segs[-1]["start_step"],
+            "makespan_s": res.makespan_s,
+            "overhead_x": overhead,
+            "traj_max_err": err,
+        }
+        emit(f"recover_{kind}", wall * 1e6,
+             f"failures={res.worker_failures} restarts={res.restarts} "
+             f"resumed_step={segs[-1]['start_step']} "
+             f"overhead={overhead:.2f}x traj_err={err:.1e}")
+
+    # quarantine: a zero retry budget turns the first failure terminal —
+    # the run must COMPLETE with the reason recorded, never deadlock
+    resq, wallq = run(ChaosTrace((WorkerFault(fault_t, "sigkill", "j0",
+                                              min_step=min_step),)),
+                      retry_policy=RetryPolicy(budget=0))
+    quarantined_ok = ("j0" in resq.quarantined
+                      and "retry budget exhausted" in resq.quarantined["j0"])
+    emit("recover_quarantine", wallq * 1e6,
+         f"quarantined={quarantined_ok} "
+         f"reason={resq.quarantined.get('j0', '')[:40]!r}")
+
+    out = {
+        "quick": quick,
+        "steps": steps,
+        "fault_t_s": fault_t,
+        "fault_min_step": min_step,
+        "baseline_makespan_s": base.makespan_s,
+        "scenarios": scenarios,
+        # gated acceptance criteria
+        "recover_traj_err": worst_err,
+        "recover_overhead_x": worst_overhead,
+        "recover_completes": completed / 3.0,
+        "quarantine_recorded": float(quarantined_ok),
+        "bench_wall_s": time.time() - t_bench,
+    }
+    path = os.path.join(ROOT, "BENCH_recover.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"\nwrote {path}")
+    assert completed == 3, f"recovery incomplete: {scenarios}"
+    assert quarantined_ok, f"quarantine not recorded: {resq.quarantined}"
+    return out
+
+
 # -------------------------------------------------------------- serving
 
 def bench_serve(quick=False):
@@ -1452,7 +1584,7 @@ def main() -> None:
                     choices=["all", "roofline", "kernels", "solver",
                              "introspection", "table2", "schedule",
                              "profile", "hetero", "chaos", "e2e",
-                             "serve"])
+                             "serve", "recover"])
     ap.add_argument("--quick", action="store_true",
                     help="reduced workloads (CI smoke job)")
     args = ap.parse_args()
@@ -1476,6 +1608,8 @@ def main() -> None:
         bench_e2e(quick=args.quick)
     if which in ("serve", "all"):
         bench_serve(quick=args.quick)
+    if which in ("recover", "all"):
+        bench_recover(quick=args.quick)
     if which in ("introspection", "all"):
         bench_introspection()
     if which in ("table2", "all"):

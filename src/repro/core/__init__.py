@@ -16,6 +16,9 @@ Layering (each layer only imports downward):
     local_backend.py LocalJaxBackend: the same Schedule IR really trains
                      on this machine's JAX devices (checkpointed
                      preemption, measured-throughput feedback)
+    process_backend.py ProcessJaxBackend: supervised per-job worker
+                     processes — heartbeats, crash/hang detection,
+                     retry with backoff, checkpoint-verified recovery
     perfmodel.py     throughput curves over GPU count: anchor trials +
                      interpolation (PerfModel, the profiles contract);
                      ObservedProfiles measured-feedback overlay
@@ -23,18 +26,21 @@ Layering (each layer only imports downward):
     baselines.py     paper baselines + the Saturn policy (emit Schedule IR)
     executor.py      simulate() compatibility wrapper + legacy comparator,
                      LocalRunner serial building block
-    api.py           SaturnSession facade (run(backend="sim"|"local"))
+    api.py           SaturnSession facade
+                     (run(backend="sim"|"local"|"process"))
 """
 from .api import SaturnSession                              # noqa: F401
 from .chaos import (CapacityChange, ChaosTrace,             # noqa: F401
-                    NodeFailure, NodeRecovery, SpotGrant, SpotRevoke,
-                    merge_events, poisson_node_failures,
+                    NodeFailure, NodeRecovery, RetryPolicy, SpotGrant,
+                    SpotRevoke, WorkerFailure, WorkerFault, merge_events,
+                    poisson_node_failures, poisson_worker_faults,
                     spot_capacity_trace)
 from .job import (ClusterSpec, DeviceClass, Job,            # noqa: F401
                   ServeJob, hpo_grid)
 from .perfmodel import (MergedProfiles, ObservedProfiles,   # noqa: F401
                         PerfModel, ThroughputCurve, select_anchor_counts)
 from .placement import ClassPool, FlatPool, NodeAware, make_backend  # noqa: F401
+from .process_backend import ProcessJaxBackend              # noqa: F401
 from .runtime import (ExecutionBackend, SimBackend,         # noqa: F401
                       SimResult, execute_runtime, simulate_runtime)
 from .schedule import Placement, Policy, Schedule, ScheduleEntry  # noqa: F401

@@ -161,8 +161,12 @@ class SaturnSession:
         trains the models on this machine's JAX devices via
         :class:`~repro.core.local_backend.LocalJaxBackend` —
         checkpointed preemption, wall-clock introspection intervals, and
-        measured step times fed back into the replans.  ``ckpt_dir``
-        (local only) pins where checkpoints land.
+        measured step times fed back into the replans; ``"process"``
+        additionally isolates every job in a supervised worker process
+        (:class:`~repro.core.process_backend.ProcessJaxBackend`) with
+        heartbeat-based failure detection, retry/backoff and verified
+        crash recovery.  ``ckpt_dir`` (local/process) pins where
+        checkpoints land.
 
         ``placement`` overrides ``cluster.placement`` for this run.
 
@@ -200,11 +204,12 @@ class SaturnSession:
             raise ValueError(
                 f"solver knobs {sorted(knobs)} only apply to the default "
                 f"SaturnPolicy; configure your policy directly")
-        if backend not in ("sim", "local"):
+        if backend not in ("sim", "local", "process"):
             raise ValueError(f"unknown execution backend {backend!r}; "
-                             f"expected 'sim' or 'local'")
-        if ckpt_dir is not None and backend != "local":
-            raise ValueError("ckpt_dir only applies to backend='local'")
+                             f"expected 'sim', 'local' or 'process'")
+        if ckpt_dir is not None and backend == "sim":
+            raise ValueError(
+                "ckpt_dir only applies to backend='local'/'process'")
         if not self.profiles:
             self.profile()
         policy = policy or SaturnPolicy(**knobs)
@@ -217,6 +222,10 @@ class SaturnSession:
         if backend == "local":
             from .local_backend import LocalJaxBackend
             exec_backend = LocalJaxBackend(self.library, ckpt_dir=ckpt_dir)
+        elif backend == "process":
+            from .process_backend import ProcessJaxBackend
+            exec_backend = ProcessJaxBackend(self.library,
+                                             ckpt_dir=ckpt_dir)
         profiles, fleets = self.profiles, None
         if self.serves:
             from ..serving.fleet import FleetManager, serve_profiles

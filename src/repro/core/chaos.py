@@ -21,6 +21,12 @@ through its :class:`~repro.core.events.EventQueue`:
   still salvage their checkpoints).
 - :class:`CapacityChange` — signed administrative resize: ``delta > 0``
   grows the pool, ``delta < 0`` shrinks it (free-first, like a revoke).
+- :class:`WorkerFault` — fault INJECTION against a real execution
+  backend's workers (SIGKILL mid-step, stalled heartbeats, truncated
+  checkpoint files); detection and recovery flow through the normal
+  supervision machinery.  :class:`WorkerFailure` is the engine-
+  synthesized DETECTION event that routes a dead/hung worker into the
+  salvage → backoff (:class:`RetryPolicy`) → relaunch → replan chain.
 
 All events are count-based, not id-based: which concrete devices die is
 resolved by the runtime at processing time against the devices actually
@@ -81,6 +87,94 @@ class CapacityChange(ClusterEvent):
     ``delta < 0`` removes (free-first)."""
     delta: int = 0
     device_class: str = DEFAULT_CLASS
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerFault(ClusterEvent):
+    """Fault-INJECTION command for fault-capable execution backends
+    (the :class:`~repro.core.process_backend.ProcessJaxBackend`): at
+    ``t`` the harness really hurts a live worker —
+
+    - ``"sigkill"``: SIGKILL the worker process mid-step (no chance to
+      checkpoint; recovery must salvage the last durable checkpoint);
+    - ``"hang"``: wedge the worker (it stops heartbeating but stays
+      alive; the coordinator must detect the missed heartbeat deadline
+      and kill it);
+    - ``"corrupt"``: truncate the job's current checkpoint file on disk
+      AND SIGKILL the worker (recovery must detect the corruption via
+      checksum and fall back to the last-known-good checkpoint).
+
+    ``job`` names the victim; ``None`` picks the first live launch in
+    job-name order (deterministic).  Detection and recovery flow through
+    the normal supervision machinery — the injection point never
+    shortcuts them, so recovery is benchmarked, not assumed.  Unlike the
+    other cluster events a WorkerFault does not touch the placement
+    pool, so it needs no elastic backend.
+
+    ``min_step`` > 0 defers the strike until the victim's DURABLE
+    checkpoint has reached that absolute step: the event still arrives
+    at ``t``, but the backend holds it until the next checkpoint-ack at
+    or past ``min_step``.  Worker startup cost (process spawn, jax
+    import, compile-cache load) varies with machine load, so a purely
+    wall-clock fault time cannot guarantee a mid-run kill — ``min_step``
+    makes "killed after at least one durable checkpoint" a property of
+    the trace instead of a race.  A victim that finishes before reaching
+    ``min_step`` is never struck.
+    """
+    kind: str = "sigkill"            # sigkill | hang | corrupt
+    job: Optional[str] = None
+    min_step: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerFailure(ClusterEvent):
+    """A DETECTED worker failure, synthesized by the runtime engine from
+    the execution backend's supervision channel (process exit, missed
+    heartbeat deadline, escaped worker exception) — not user-authored.
+    Riding the cluster-event queue gives failures the same deterministic
+    ordering as injected chaos (a failure at the instant of a completion
+    wins the race) and routes them into the shared salvage → backoff →
+    relaunch → replan machinery.  ``token`` pins the launch so a failure
+    of an already-preempted launch is ignored as stale."""
+    job: str = ""
+    token: int = -1
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Relaunch policy for failed workers: exponential backoff with
+    seeded jitter under a bounded per-job retry budget.
+
+    A job's ``attempt``-th failure (1-based) waits
+    ``min(cap_s, base_s * 2**(attempt-1))`` scaled by a deterministic
+    jitter factor in ``[1-jitter, 1+jitter]`` (seeded per (job,
+    attempt), so concurrent victims don't relaunch in lockstep) before
+    it is admissible again — never less than the cluster's ordinary
+    ``restart_cost_s``.  A job that fails more than ``budget`` times is
+    QUARANTINED: taken out of the workload with a recorded reason while
+    the rest of the sweep replans onto the surviving capacity; the run
+    completes without it instead of deadlocking or crashing."""
+    budget: int = 3
+    base_s: float = 2.0
+    cap_s: float = 60.0
+    jitter: float = 0.2
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.budget < 0:
+            raise ValueError("retry budget must be >= 0")
+        if not 0.0 <= self.jitter < 1.0:
+            raise ValueError("jitter must be in [0, 1)")
+
+    def backoff_s(self, job: str, attempt: int) -> float:
+        delay = min(self.cap_s, self.base_s * 2.0 ** max(0, attempt - 1))
+        if self.jitter:
+            # string seeds hash deterministically (sha512) across
+            # processes — no PYTHONHASHSEED dependence
+            rng = random.Random(f"{self.seed}:{job}:{attempt}")
+            delay *= 1.0 + self.jitter * (2.0 * rng.random() - 1.0)
+        return delay
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,6 +248,37 @@ def poisson_node_failures(rate_per_hour: float, horizon_s: float, *,
         if keep:
             out.append(NodeFailure(t, n_gpus, device_class,
                                    recover_after_s))
+    return tuple(out)
+
+
+def poisson_worker_faults(rate_per_hour: float, horizon_s: float, *,
+                          seed: int = 0,
+                          kinds: Sequence[str] = ("sigkill", "hang",
+                                                  "corrupt"),
+                          jobs: Optional[Sequence[str]] = None
+                          ) -> Tuple[WorkerFault, ...]:
+    """Seeded Poisson worker-fault arrivals over ``[0, horizon_s)``:
+    each event draws its kind uniformly from ``kinds`` and its victim
+    from ``jobs`` (``None``: let the backend pick the first live
+    launch).  The fault-injection counterpart of
+    :func:`poisson_node_failures` — same seed, same times, every run."""
+    if rate_per_hour < 0:
+        raise ValueError("rate_per_hour must be >= 0")
+    if not kinds:
+        raise ValueError("kinds must be non-empty")
+    if rate_per_hour == 0:
+        return ()
+    rng = random.Random(seed)
+    lam = rate_per_hour / 3600.0
+    out: List[WorkerFault] = []
+    t = 0.0
+    while True:
+        t += rng.expovariate(lam)
+        if t >= horizon_s:
+            break
+        kind = kinds[rng.randrange(len(kinds))]
+        job = jobs[rng.randrange(len(jobs))] if jobs else None
+        out.append(WorkerFault(t, kind, job))
     return tuple(out)
 
 

@@ -147,8 +147,11 @@ class LocalJaxBackend(ExecutionBackend):
                  devices: Optional[List] = None,
                  min_requeue_s: float = 0.25,
                  fallback_step_s: float = 0.1,
-                 resume: bool = False):
+                 resume: bool = False,
+                 retry_policy=None):
         self.library = library or ParallelismLibrary()
+        # relaunch policy for failed workers (None: engine defaults)
+        self.retry_policy = retry_policy
         self.ckpt_dir = ckpt_dir
         self._devices = devices
         self.min_requeue_s = min_requeue_s
@@ -184,7 +187,7 @@ class LocalJaxBackend(ExecutionBackend):
             # a stale checkpoint from a previous run would make a
             # "fresh" run silently continue a finished model
             for j in jobs:
-                for suffix in (".npz", ".npz.meta.json"):
+                for suffix in (".npz", ".npz.prev", ".npz.meta.json"):
                     p = os.path.join(self.ckpt_dir, j.name + suffix)
                     if os.path.exists(p):
                         os.remove(p)
@@ -192,6 +195,7 @@ class LocalJaxBackend(ExecutionBackend):
         self._lock = threading.Lock()
         self._poke = threading.Event()
         self._finished: List[LocalHandle] = []
+        self._failed: List[Tuple[LocalHandle, str]] = []
         self._by_worker: Dict[_Worker, LocalHandle] = {}
         self.observed.clear()
         self.job_stats.clear()
@@ -229,7 +233,7 @@ class LocalJaxBackend(ExecutionBackend):
         # before its timestamp unless a real completion forces it
         while True:
             with self._lock:
-                if self._finished:
+                if self._finished or self._failed:
                     return
             dt = t - self.now()
             if dt <= 0:
@@ -238,15 +242,30 @@ class LocalJaxBackend(ExecutionBackend):
             self._poke.clear()
 
     def _on_worker_done(self, worker: _Worker) -> None:
+        # an exception escaping the worker goes to the FAILURE channel
+        # (never _finished): the engine synthesizes a WorkerFailure,
+        # salvages the durable checkpoint and retries/quarantines — the
+        # scheduler is poked either way, so wait_until never sleeps on a
+        # completion that will not come
         with self._lock:
             h = self._by_worker.get(worker)
             if h is not None and not worker.preempted:
-                self._finished.append(h)
+                if worker.error is not None:
+                    self._failed.append((h, f"worker thread died: "
+                                         f"{type(worker.error).__name__}: "
+                                         f"{worker.error}"))
+                else:
+                    self._finished.append(h)
         self._poke.set()
 
     def drain_finished(self) -> Tuple[LocalHandle, ...]:
         with self._lock:
             out, self._finished = tuple(self._finished), []
+        return out
+
+    def drain_failures(self) -> Tuple[Tuple[LocalHandle, str], ...]:
+        with self._lock:
+            out, self._failed = tuple(self._failed), []
         return out
 
     # ---------------------------------------------------------- feedback
@@ -325,6 +344,34 @@ class LocalJaxBackend(ExecutionBackend):
     def is_finished(self, handle: LocalHandle) -> bool:
         return handle.worker.done.is_set()
 
+    def _durable_steps(self, handle: LocalHandle) -> int:
+        """Relative steps of this launch that are durably on disk —
+        the checkpoint chain a relaunch will ACTUALLY load (current
+        file, else last-known-good ``.prev``), measured against the
+        absolute step the engine launched from.  This is what a failed
+        launch salvages: nothing more than what recovery can resume."""
+        from ..checkpoint.store import (CheckpointCorruptError,
+                                        verify_checkpoint)
+        ckpt = os.path.join(self.ckpt_dir, f"{handle.job.name}.npz")
+        start_abs = handle.job.total_steps - handle.steps_at_start
+        for p in (ckpt, ckpt + ".prev"):
+            if not os.path.exists(p):
+                continue
+            try:
+                meta = verify_checkpoint(p)
+            except CheckpointCorruptError:
+                continue
+            return max(0, int(meta.get("step", 0)) - start_abs)
+        return 0
+
+    def salvage(self, handle: LocalHandle) -> int:
+        w = handle.worker
+        w.join()
+        self._finish(handle, preempted=False,
+                     error=(f"{type(w.error).__name__}: {w.error}"
+                            if w.error is not None else "worker failed"))
+        return self._durable_steps(handle)
+
     def preempt(self, handle: LocalHandle, t: float) -> int:
         """Checkpoint-and-stop, for real: the worker finishes its
         in-flight step, writes the checkpoint, and exits; relaunch
@@ -333,13 +380,17 @@ class LocalJaxBackend(ExecutionBackend):
         w = handle.worker
         w.stop_flag.set()
         w.join()
+        if w.error is not None:
+            # the worker was already dead: report only the durable
+            # progress a relaunch can really resume (its failure record
+            # rides drain_failures, dropped as stale if this preemption
+            # won the race) — never raise mid-replan
+            self._finish(handle, preempted=False,
+                         error=f"{type(w.error).__name__}: {w.error}")
+            return self._durable_steps(handle)
         # w.preempted reflects what really happened: False if the
         # worker had already finished its budget before the stop landed
         self._finish(handle, preempted=w.preempted)
-        if w.error is not None:
-            raise RuntimeError(
-                f"local launch of {handle.job.name} failed during "
-                f"preemption") from w.error
         return w.steps_done
 
     def complete(self, handle: LocalHandle, t: float) -> None:
@@ -350,18 +401,25 @@ class LocalJaxBackend(ExecutionBackend):
             raise RuntimeError(
                 f"local launch of {handle.job.name} failed") from w.error
 
-    def _finish(self, handle: LocalHandle, preempted: bool) -> None:
+    def _finish(self, handle: LocalHandle, preempted: bool,
+                error: Optional[str] = None) -> None:
         w = handle.worker
         self._record(handle)
         with self._lock:
-            self._by_worker.pop(w, None)
+            if self._by_worker.pop(w, None) is None and \
+                    handle.job.name in self.job_stats:
+                return    # already recorded (preempt/salvage race)
         seg = {
             "technique": handle.technique,
             "n_gpus": handle.n_gpus,
             "device_class": handle.device_class,
+            # worker frame: start_step + steps = absolute step reached
+            # (steps_done may additionally carry a resume pre-credit in
+            # the engine frame)
             "start_step": w.start_step,
-            "steps": w.steps_done,
+            "steps": getattr(w, "raw_steps", w.steps_done),
             "preempted": preempted,
+            "failed": error,
             "compile_s": w.compile_s,
             "measured_step_s": w.measured_step_s,
             "first_loss": w.losses[0][1] if w.losses else None,

@@ -52,7 +52,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .chaos import (CapacityChange, ChaosTrace, NodeFailure, NodeRecovery,
-                    SpotGrant, SpotRevoke)
+                    RetryPolicy, SpotGrant, SpotRevoke, WorkerFailure,
+                    WorkerFault)
 from .events import (ClusterEvent, EventQueue, IntrospectionTick,
                      JobArrival, JobCompletion, RestartDone)
 from .job import DEFAULT_CLASS, SERVE_TECH, ClusterSpec, Job
@@ -86,6 +87,12 @@ class SimResult:
     # execution-backend extras (LocalJaxBackend fills per-job segment
     # stats: losses, measured step times, compile costs); {} for sim
     stats: Dict[str, dict] = dataclasses.field(default_factory=dict)
+    # supervision: detected worker failures (dead/hung workers, escaped
+    # worker exceptions) routed through the retry machinery, and jobs
+    # that exhausted their retry budget — quarantined with a recorded
+    # reason instead of crashing or deadlocking the run
+    worker_failures: int = 0
+    quarantined: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     def utilization(self, cluster: ClusterSpec) -> float:
         busy = sum((g.end_s - g.start_s) * g.n_gpus for g in self.gantt
@@ -164,6 +171,40 @@ class ExecutionBackend:
         deliver completions through here; exact backends through the
         events they scheduled at launch)."""
         return ()
+
+    # --------------------------------------------------------- supervision
+    def drain_failures(self) -> Tuple[Tuple[LaunchHandle, str], ...]:
+        """``(handle, reason)`` pairs for launches whose workers failed
+        since the last drain — a worker process that died, a worker
+        that missed its heartbeat deadline, an exception that escaped a
+        worker thread.  The engine synthesizes a
+        :class:`~repro.core.chaos.WorkerFailure` event per record and
+        routes it through salvage → backoff → relaunch (or quarantine
+        once the :attr:`retry_policy` budget is exhausted)."""
+        return ()
+
+    # relaunch policy for failed workers; engine falls back to the
+    # defaults when a backend leaves this None
+    retry_policy: Optional[RetryPolicy] = None
+
+    def salvage(self, handle: LaunchHandle) -> int:
+        """Steps of a FAILED launch that are durable (checkpointed on
+        disk and loadable at relaunch).  The base answers 0 — a worker
+        that died without supervision salvages nothing beyond the
+        checkpoint it was launched from; backends with periodic durable
+        checkpoints answer from their checkpoint-ack records."""
+        return 0
+
+    def inject_fault(self, fault: WorkerFault,
+                     running: Dict[str, LaunchHandle], t: float) -> None:
+        """Really hurt a live worker (SIGKILL / stall heartbeats /
+        truncate its checkpoint) per an injected
+        :class:`~repro.core.chaos.WorkerFault`.  Only fault-capable
+        backends (separate worker processes) support this."""
+        raise RuntimeError(
+            f"execution backend {self.kind!r} cannot inject worker "
+            f"faults (kind={fault.kind!r}); use a process-isolated "
+            f"backend such as ProcessJaxBackend")
 
     # ---------------------------------------------------------- estimates
     def est_step(self, job: str, tech: str, g: int,
@@ -333,6 +374,7 @@ class ClusterState:
         self.arrived: set = set()
         self.waiting: List[str] = []
         self.restarting: set = set()
+        self.quarantined: Dict[str, str] = {}    # job -> recorded reason
         self.running: Dict[str, LaunchHandle] = {}
         self.backend = backend
         self.gantt: List[GanttEntry] = []
@@ -364,12 +406,19 @@ class ClusterState:
 
     def live_jobs(self) -> List[Job]:
         """Arrived, unfinished jobs (running, waiting, or restarting) —
-        what planners plan over."""
+        what planners plan over.  Quarantined jobs are out of the
+        workload: the rest of the sweep replans onto the surviving
+        capacity without them."""
         return [self.by_name[n] for n in self.by_name
-                if n in self.arrived and self.remaining[n] > 0]
+                if n in self.arrived and self.remaining[n] > 0
+                and n not in self.quarantined]
 
     def all_done(self) -> bool:
-        return all(v == 0 for v in self.remaining.values())
+        """Every job finished its budget or was quarantined (a
+        quarantined job is RESOLVED, not silently dropped: its recorded
+        reason rides ``SimResult.quarantined``)."""
+        return all(v == 0 for n, v in self.remaining.items()
+                   if n not in self.quarantined)
 
 
 def execute_runtime(jobs: List[Job], policy: Policy,
@@ -402,7 +451,10 @@ def execute_runtime(jobs: List[Job], policy: Policy,
     replans plan over.  Per-fleet per-window latency/SLO stats land in
     ``SimResult.stats["serving"]``."""
     backend = backend or make_backend(cluster)
-    if chaos is not None and len(chaos) and not backend.supports_elasticity:
+    if chaos is not None and not backend.supports_elasticity and \
+            any(not isinstance(e, WorkerFault) for e in chaos):
+        # WorkerFaults never touch the placement pool, so a trace made
+        # only of them runs on any backend
         raise ValueError(
             f"chaos injection needs an elastic placement backend; "
             f"{backend.kind!r} does not support shrink/grow")
@@ -429,6 +481,9 @@ def execute_runtime(jobs: List[Job], policy: Policy,
     replans = 0
     restarts = 0
     failures = 0
+    worker_failures = 0
+    retry = getattr(exec_backend, "retry_policy", None) or RetryPolicy()
+    fail_counts: Dict[str, int] = {}   # job -> detected failures so far
     launch_tokens = {}            # job -> token of its current launch
     next_token = [0]
 
@@ -706,9 +761,56 @@ def execute_runtime(jobs: List[Job], policy: Policy,
         backend.remove_devices(sorted(victims))
         return len(victims)
 
+    def handle_worker_failure(e: WorkerFailure, t: float) -> bool:
+        """Recover one detected worker failure: close the launch at its
+        last DURABLE step (the backend's salvage answer — checkpointed
+        on disk, loadable at relaunch), then relaunch under exponential
+        backoff + jitter, or quarantine the job with a recorded reason
+        once the retry budget is exhausted.  The run never deadlocks on
+        a failed job and never silently drops one."""
+        nonlocal restarts, worker_failures
+        h = state.running.get(e.job)
+        if h is None or h.token != e.token:
+            return False            # stale: that launch is already gone
+        worker_failures += 1
+        state.running.pop(e.job)
+        done = exec_backend.salvage(h)
+        backend.release(h.placement)
+        state.log_run(e.job, h, t)
+        if done >= h.steps_at_start:
+            # died AFTER its last step was durably checkpointed: the
+            # work survived the worker
+            state.remaining[e.job] = 0
+            return True
+        state.remaining[e.job] = max(1, h.steps_at_start - done)
+        fail_counts[e.job] = attempt = fail_counts.get(e.job, 0) + 1
+        if attempt > retry.budget:
+            state.quarantined[e.job] = (
+                f"retry budget exhausted after {attempt} failures; "
+                f"last: {e.reason}")
+            return True
+        delay = max(cluster.restart_cost_s, retry.backoff_s(e.job, attempt))
+        state.gantt.append(GanttEntry(
+            e.job, "restart", 0, t, t + delay, kind="restart",
+            device_class=h.device_class))
+        state.restarting.add(e.job)
+        q.push(RestartDone(t + delay, e.job))
+        restarts += 1
+        return True
+
     def apply_cluster_event(e: ClusterEvent, t: float) -> bool:
         """Mutate the pool for one chaos event; True if anything changed."""
         nonlocal failures
+        if isinstance(e, WorkerFailure):
+            return handle_worker_failure(e, t)
+        if isinstance(e, WorkerFault):
+            # injection only: the coordinator must DETECT the damage
+            # through its supervision channel (process exit, missed
+            # heartbeat, checksum) and synthesize the WorkerFailure —
+            # never short-circuited here, so recovery is exercised for
+            # real.  No pool change, no replan from this event.
+            exec_backend.inject_fault(e, state.running, t)
+            return False
         if isinstance(e, NodeFailure):
             removed = shrink(e.device_class, e.n_gpus, t,
                              prefer_free=False)
@@ -778,6 +880,25 @@ def execute_runtime(jobs: List[Job], policy: Policy,
                         else h.finish_t, h.job.name, h.token))
                 q.push(ev)
                 continue
+
+        failed = exec_backend.drain_failures()
+        if failed:
+            # synthesize detection events and requeue: WorkerFailure is
+            # a ClusterEvent (priority above completions), so a failure
+            # detected at the instant of a scheduled completion wins the
+            # race — the stale completion is then dropped by its token.
+            # The failure rides at ev.t, NOT the (possibly later) wall
+            # clock: the requeued event keeps its original timestamp,
+            # and a failure stamped later would lose to it on pop order
+            # (a completion prediction that overran its timestamp would
+            # then "complete" the dead worker).  The engine clock still
+            # reads event_time() when the failure is processed.
+            tf = ev.t
+            for h, reason in failed:
+                q.push(WorkerFailure(tf, job=h.job.name, token=h.token,
+                                     reason=reason))
+            q.push(ev)
+            continue
 
         if isinstance(ev, JobArrival):
             state.t = exec_backend.event_time(ev)
@@ -887,7 +1008,8 @@ def execute_runtime(jobs: List[Job], policy: Policy,
                 f"free={backend.free_gpus} order={order.to_tuples()}")
 
     if not state.all_done():
-        unfinished = [n for n, v in state.remaining.items() if v > 0]
+        unfinished = [n for n, v in state.remaining.items()
+                      if v > 0 and n not in state.quarantined]
         raise RuntimeError(f"runtime drained with unfinished jobs: "
                            f"{unfinished}")
     stats = exec_backend.result_stats()
@@ -897,7 +1019,9 @@ def execute_runtime(jobs: List[Job], policy: Policy,
         stats["serving"] = fleets.stats()
     verify_conservation(state)
     return SimResult(policy.name, state.t, state.gantt, replans, restarts,
-                     failures=failures, stats=stats)
+                     failures=failures, stats=stats,
+                     worker_failures=worker_failures,
+                     quarantined=dict(state.quarantined))
 
 
 def simulate_runtime(jobs: List[Job], policy: Policy,

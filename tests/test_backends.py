@@ -193,6 +193,45 @@ def test_local_backend_preempt_checkpoint_resume(tmp_path):
     assert steps_logged[0] == 1 and steps_logged[-1] == steps
 
 
+def test_local_worker_failure_surfaces_and_quarantines(tmp_path):
+    """An exception escaping a worker thread must reach the engine as a
+    detected worker failure (never a silent hang in wait_until): the
+    job is retried under its budget, then quarantined with the reason,
+    and the run completes."""
+    from repro.core.chaos import RetryPolicy
+
+    class Boom:
+        name = "boom"
+
+        def search_space(self, cfg, n):
+            return n == 1
+
+        def plan(self, cfg, n):
+            raise RuntimeError("poisoned technique")
+
+    lib = ParallelismLibrary()
+    lib.register(Boom())
+    jobs = [Job("j0", MICRO, 2, 32, total_steps=50, lr=1e-3, seed=0)]
+    # the only profile j0 has is the poisoned technique: every launch
+    # of it dies inside the worker thread
+    profiles = {("j0", "boom", 1): Profile("j0", "boom", 1, 0.01, 1e9,
+                                           True, "t")}
+    be = LocalJaxBackend(
+        library=lib, ckpt_dir=str(tmp_path),
+        retry_policy=RetryPolicy(budget=1, base_s=0.1, cap_s=0.2,
+                                 jitter=0.0))
+    res = simulate(jobs, CurrentPractice(), profiles, LOCAL_CLUSTER,
+                   exec_backend=be)
+    # budget 1: original + one retry fail, then quarantine
+    assert res.worker_failures == 2
+    assert res.restarts == 1
+    assert "j0" in res.quarantined
+    assert "retry budget exhausted" in res.quarantined["j0"]
+    assert "poisoned technique" in res.quarantined["j0"]
+    seg = res.stats["j0"]["segments"][0]
+    assert seg["failed"] and "poisoned technique" in seg["failed"]
+
+
 # ------------------------------------------------------ session plumbing
 
 def test_session_rejects_unknown_backend():

@@ -1,0 +1,289 @@
+"""Worker-failure machinery in the event engine, exercised with a
+scripted virtual-time backend (no real processes): detection events,
+checkpoint salvage, retry backoff, quarantine on budget exhaustion,
+stale-failure drops, and the RetryPolicy / poisson_worker_faults
+contracts."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.baselines import CurrentPractice
+from repro.core.chaos import (ChaosTrace, NodeFailure, RetryPolicy,
+                              WorkerFailure, WorkerFault,
+                              poisson_worker_faults)
+from repro.core.executor import simulate
+from repro.core.job import ClusterSpec, Job
+from repro.core.profiler import Profile
+from repro.core.runtime import SimBackend
+
+CFG = get_config("xlstm-125m").reduced()
+CLUSTER = ClusterSpec(nodes=1, gpus_per_node=4, restart_cost_s=1.0)
+
+
+def mk_workload(n_jobs=2, steps=200):
+    jobs, profiles = [], {}
+    for i in range(n_jobs):
+        j = Job(f"j{i}", CFG, 8, 64, total_steps=steps + 50 * i, seed=i)
+        jobs.append(j)
+        for g in (1, 2, 4):
+            profiles[(j.name, "ddp", g)] = Profile(
+                j.name, "ddp", g, (1.0 + 0.2 * i) / g ** 0.8, 1e9, True, "t")
+    return jobs, profiles
+
+
+class ScriptedFaultBackend(SimBackend):
+    """Virtual-time backend that really honors WorkerFault injection:
+    the victim's launch is recorded as pending-failed with a scripted
+    durable-step answer, delivered through drain_failures() exactly like
+    a real supervision channel — so engine-side detection, salvage,
+    backoff and quarantine run for real at sim speed."""
+
+    def __init__(self, durable_fraction=0.5, retry_policy=None, **kw):
+        super().__init__(**kw)
+        self.durable_fraction = durable_fraction
+        self.retry_policy = retry_policy
+        self._pending = []           # (handle, reason)
+        self._durable = {}           # launch token -> durable steps
+        self.injected = []           # (kind, job, t) audit trail
+
+    def inject_fault(self, fault, running, t):
+        if fault.job is not None:
+            h = running.get(fault.job)
+            if h is None:
+                return               # victim not live: injection no-ops
+        else:
+            if not running:
+                return
+            h = running[min(running)]
+        self.injected.append((fault.kind, h.job.name, t))
+        done = self.steps_done(h, t)
+        self._durable[h.token] = int(done * self.durable_fraction)
+        self._pending.append((h, f"injected {fault.kind}"))
+
+    def drain_failures(self):
+        out, self._pending = tuple(self._pending), []
+        return out
+
+    def salvage(self, handle):
+        return self._durable.get(handle.token, 0)
+
+
+class AlwaysFailBackend(ScriptedFaultBackend):
+    """Every launch of ``victim`` crashes (salvaging nothing): the only
+    way out for that job is the quarantine path."""
+
+    def __init__(self, victim, **kw):
+        super().__init__(**kw)
+        self.victim = victim
+
+    def launch(self, job, entry, placement, device_class, remaining, t,
+               token):
+        h = super().launch(job, entry, placement, device_class, remaining,
+                           t, token)
+        if job.name == self.victim:
+            self._pending.append((h, "scripted crash"))
+        return h
+
+
+# ------------------------------------------------ salvage and relaunch
+
+def test_fault_salvages_and_relaunches_to_completion():
+    jobs, profiles = mk_workload(n_jobs=2, steps=200)
+    be = ScriptedFaultBackend(
+        durable_fraction=0.5,
+        retry_policy=RetryPolicy(budget=3, base_s=50.0, jitter=0.0),
+        noise_sigma=0.0)
+    trace = ChaosTrace((WorkerFault(30.0, "sigkill", "j0"),))
+    res = simulate(jobs, CurrentPractice(), profiles, CLUSTER,
+                   exec_backend=be, chaos=trace)
+    assert be.injected == [("sigkill", "j0", 30.0)]
+    assert res.worker_failures == 1
+    assert res.quarantined == {}
+    # half the victim's progress was durable: the relaunch reruns the
+    # other half, so j0 burns MORE gpu-seconds than its budget alone
+    runs = [g for g in res.gantt if g.job == "j0" and g.kind == "run"]
+    assert len(runs) == 2
+    # the failure restart charges the full scripted backoff (50s beats
+    # the 1s cluster restart cost), exactly once
+    restarts = [g for g in res.gantt if g.job == "j0"
+                and g.kind == "restart"]
+    assert len(restarts) == 1 and res.restarts == 1
+    assert restarts[0].end_s - restarts[0].start_s == pytest.approx(50.0)
+    # relaunch waits out the backoff before running again
+    assert runs[1].start_s >= restarts[0].end_s - 1e-9
+
+
+def test_everything_durable_means_no_relaunch():
+    """A worker that dies AFTER its last step was checkpointed loses
+    nothing: the launch closes as complete, no retry is charged."""
+    jobs, profiles = mk_workload(n_jobs=1, steps=100)
+    be = ScriptedFaultBackend(durable_fraction=1.0, noise_sigma=0.0)
+
+    class FullSalvage(ScriptedFaultBackend):
+        def salvage(self, handle):
+            return handle.steps_at_start
+
+    be = FullSalvage(noise_sigma=0.0)
+    trace = ChaosTrace((WorkerFault(30.0, "sigkill", "j0"),))
+    res = simulate(jobs, CurrentPractice(), profiles, CLUSTER,
+                   exec_backend=be, chaos=trace)
+    assert res.worker_failures == 1
+    assert res.restarts == 0
+    assert res.quarantined == {}
+    # the run ends at the detection point, not the job's natural eta
+    assert res.makespan_s < 100 * 1.0 / 1 ** 0.8
+
+
+def test_unnamed_fault_picks_first_live_launch_deterministically():
+    jobs, profiles = mk_workload(n_jobs=3, steps=200)
+    be = ScriptedFaultBackend(
+        retry_policy=RetryPolicy(budget=3, base_s=2.0, jitter=0.0),
+        noise_sigma=0.0)
+    trace = ChaosTrace((WorkerFault(10.0, "hang", None),))
+    res = simulate(jobs, CurrentPractice(), profiles, CLUSTER,
+                   exec_backend=be, chaos=trace)
+    assert [v for _, v, _ in be.injected] == ["j0"]
+    assert res.worker_failures == 1
+
+
+def test_fault_against_finished_job_is_noop():
+    jobs, profiles = mk_workload(n_jobs=1, steps=10)
+    be = ScriptedFaultBackend(noise_sigma=0.0)
+    # j0 finishes at t=10; the fault at t=50 finds nothing to hurt
+    trace = ChaosTrace((WorkerFault(50.0, "sigkill", "j0"),))
+    res = simulate(jobs, CurrentPractice(), profiles, CLUSTER,
+                   exec_backend=be, chaos=trace)
+    assert be.injected == []
+    assert res.worker_failures == 0 and res.quarantined == {}
+
+
+# --------------------------------------------------------- quarantine
+
+def test_budget_exhaustion_quarantines_with_reason():
+    jobs, profiles = mk_workload(n_jobs=2, steps=100)
+    be = AlwaysFailBackend(
+        "j0", retry_policy=RetryPolicy(budget=2, base_s=1.0, jitter=0.0),
+        noise_sigma=0.0)
+    res = simulate(jobs, CurrentPractice(), profiles, CLUSTER,
+                   exec_backend=be)
+    # budget 2: two relaunches, the third failure quarantines — the run
+    # COMPLETES (no deadlock, no raise) with the reason recorded
+    assert res.worker_failures == 3
+    assert "j0" in res.quarantined
+    assert "retry budget exhausted after 3 failures" in res.quarantined["j0"]
+    assert "scripted crash" in res.quarantined["j0"]
+    # the healthy job still ran its full budget
+    j1_runs = [g for g in res.gantt if g.job == "j1" and g.kind == "run"]
+    assert j1_runs and res.makespan_s > 0
+
+
+def test_zero_budget_quarantines_on_first_failure():
+    jobs, profiles = mk_workload(n_jobs=1, steps=100)
+    be = AlwaysFailBackend("j0", retry_policy=RetryPolicy(budget=0),
+                           noise_sigma=0.0)
+    res = simulate(jobs, CurrentPractice(), profiles, CLUSTER,
+                   exec_backend=be)
+    assert res.worker_failures == 1 and res.restarts == 0
+    assert "after 1 failures" in res.quarantined["j0"]
+
+
+# ------------------------------------------------------ stale failures
+
+def test_stale_token_failure_is_dropped():
+    """A WorkerFailure whose token does not match the live launch (the
+    launch it saw die was already preempted/replaced) must be ignored —
+    same-name-different-launch is not the same failure."""
+    jobs, profiles = mk_workload(n_jobs=2, steps=200)
+    trace = ChaosTrace((WorkerFailure(30.0, job="j0", token=999,
+                                      reason="stale ghost"),))
+    base = simulate(jobs, CurrentPractice(), profiles, CLUSTER,
+                    noise_sigma=0.0)
+    res = simulate(jobs, CurrentPractice(), profiles, CLUSTER,
+                   noise_sigma=0.0, chaos=trace)
+    assert res.worker_failures == 0
+    assert res.quarantined == {}
+    assert res.makespan_s == base.makespan_s
+    assert len(res.gantt) == len(base.gantt)
+
+
+# ------------------------------------------- backend capability gating
+
+def test_sim_backend_refuses_fault_injection():
+    jobs, profiles = mk_workload(n_jobs=1)
+    trace = ChaosTrace((WorkerFault(5.0, "sigkill", "j0"),))
+    with pytest.raises(RuntimeError, match="ProcessJaxBackend"):
+        simulate(jobs, CurrentPractice(), profiles, CLUSTER, chaos=trace)
+
+
+def test_workerfault_trace_allowed_on_non_elastic_placement():
+    """WorkerFaults never touch the placement pool, so a fault-only
+    trace runs under node placement; mixing in a pool-shrinking event
+    still requires elasticity."""
+    jobs, profiles = mk_workload(n_jobs=1, steps=100)
+    cluster = ClusterSpec(nodes=1, gpus_per_node=4, restart_cost_s=1.0,
+                          placement="node")
+    be = ScriptedFaultBackend(
+        retry_policy=RetryPolicy(budget=3, base_s=1.0, jitter=0.0),
+        noise_sigma=0.0)
+    res = simulate(jobs, CurrentPractice(), profiles, cluster,
+                   exec_backend=be,
+                   chaos=ChaosTrace((WorkerFault(10.0, "sigkill", "j0"),)))
+    assert res.worker_failures == 1
+    with pytest.raises(ValueError, match="elastic"):
+        simulate(jobs, CurrentPractice(), profiles, cluster,
+                 exec_backend=ScriptedFaultBackend(noise_sigma=0.0),
+                 chaos=ChaosTrace((WorkerFault(10.0, "sigkill", "j0"),
+                                   NodeFailure(20.0))))
+
+
+# ---------------------------------------------------------- RetryPolicy
+
+def test_retry_backoff_doubles_and_caps():
+    rp = RetryPolicy(budget=5, base_s=2.0, cap_s=10.0, jitter=0.0)
+    assert rp.backoff_s("j", 1) == 2.0
+    assert rp.backoff_s("j", 2) == 4.0
+    assert rp.backoff_s("j", 3) == 8.0
+    assert rp.backoff_s("j", 4) == 10.0        # capped
+    assert rp.backoff_s("j", 9) == 10.0
+
+
+def test_retry_jitter_bounded_and_deterministic():
+    rp = RetryPolicy(base_s=8.0, cap_s=8.0, jitter=0.25, seed=3)
+    a = rp.backoff_s("jobA", 1)
+    assert 8.0 * 0.75 <= a <= 8.0 * 1.25
+    assert a == rp.backoff_s("jobA", 1)        # seeded: reproducible
+    # per-(job, attempt) seeding: concurrent victims desynchronize
+    assert a != rp.backoff_s("jobB", 1)
+    assert rp.backoff_s("jobA", 2) != 2.0 * a
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(budget=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=-0.1)
+
+
+# ------------------------------------------------ poisson_worker_faults
+
+def test_poisson_worker_faults_deterministic_and_typed():
+    a = poisson_worker_faults(60.0, 3600.0, seed=5)
+    b = poisson_worker_faults(60.0, 3600.0, seed=5)
+    assert a == b and len(a) > 10
+    assert all(isinstance(e, WorkerFault) for e in a)
+    assert all(0 <= e.t < 3600.0 for e in a)
+    assert {e.kind for e in a} <= {"sigkill", "hang", "corrupt"}
+    assert poisson_worker_faults(60.0, 3600.0, seed=6) != a
+    assert poisson_worker_faults(0.0, 3600.0) == ()
+
+
+def test_poisson_worker_faults_kinds_and_jobs():
+    evs = poisson_worker_faults(120.0, 3600.0, seed=1,
+                                kinds=("sigkill",), jobs=("a", "b"))
+    assert {e.kind for e in evs} == {"sigkill"}
+    assert {e.job for e in evs} <= {"a", "b"}
+    with pytest.raises(ValueError):
+        poisson_worker_faults(1.0, 10.0, kinds=())
+    with pytest.raises(ValueError):
+        poisson_worker_faults(-1.0, 10.0)

@@ -1,0 +1,178 @@
+"""Checkpoint store integrity: atomic single-point commit of arrays +
+metadata, content checksums verified on load, last-known-good fallback
+for corrupt/truncated files, and the validate-before-trust resume
+contract of load_training_state."""
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (META_KEY, CheckpointCorruptError,
+                                    load_checkpoint, load_metadata,
+                                    load_training_state, save_checkpoint,
+                                    verify_checkpoint)
+
+
+def tree(seed, scale=1.0):
+    rng = np.random.RandomState(seed)
+    return {"w": rng.randn(4, 4).astype(np.float32) * scale,
+            "b": rng.randn(4).astype(np.float32) * scale}
+
+
+def assert_tree_equal(a, b):
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+
+
+# ----------------------------------------------------- atomic commit
+
+def test_metadata_is_bundled_inside_the_npz(tmp_path):
+    """Arrays and metadata commit at ONE atomic point: the npz itself
+    carries the metadata, so no crash window can pair new arrays with
+    stale metadata."""
+    p = str(tmp_path / "c.npz")
+    save_checkpoint(p, tree(0), {"step": 7, "loss": 1.5})
+    with np.load(p) as data:
+        assert META_KEY in data
+        meta = json.loads(bytes(data[META_KEY].tobytes()).decode())
+    assert meta["step"] == 7
+    assert "checksum" in meta
+
+
+def test_no_stray_temp_files_after_save(tmp_path):
+    p = str(tmp_path / "c.npz")
+    save_checkpoint(p, tree(0), {"step": 1})
+    names = set(os.listdir(tmp_path))
+    assert not any(n.endswith(".tmp") for n in names)
+
+
+def test_sidecar_still_written_and_metadata_prefers_bundle(tmp_path):
+    p = str(tmp_path / "c.npz")
+    save_checkpoint(p, tree(0), {"step": 3})
+    assert os.path.exists(p + ".meta.json")
+    # poison the sidecar: the bundled copy must win
+    with open(p + ".meta.json", "w") as f:
+        json.dump({"step": 999}, f)
+    assert load_metadata(p)["step"] == 3
+    assert "checksum" not in load_metadata(p)
+
+
+def test_legacy_sidecar_fallback(tmp_path):
+    """A checkpoint with no bundled metadata (pre-checksum format or
+    missing file) falls back to the .meta.json sidecar."""
+    p = str(tmp_path / "c.npz")
+    with open(p + ".meta.json", "w") as f:
+        json.dump({"step": 11}, f)
+    assert load_metadata(p)["step"] == 11
+
+
+# --------------------------------------------------------- checksums
+
+def test_roundtrip_verifies_checksum(tmp_path):
+    p = str(tmp_path / "c.npz")
+    t = tree(1)
+    save_checkpoint(p, t, {"step": 5})
+    assert verify_checkpoint(p)["step"] == 5
+    out = load_checkpoint(p, tree(99))
+    assert_tree_equal(out, t)
+
+
+def test_truncated_file_raises_corrupt(tmp_path):
+    p = str(tmp_path / "c.npz")
+    save_checkpoint(p, tree(1), {"step": 5}, keep_previous=False)
+    size = os.path.getsize(p)
+    with open(p, "r+b") as f:
+        f.truncate(size // 2)
+    with pytest.raises(CheckpointCorruptError):
+        verify_checkpoint(p)
+    with pytest.raises(CheckpointCorruptError):
+        load_checkpoint(p, tree(1))
+
+
+def test_bitflip_fails_checksum(tmp_path):
+    """Same length, flipped payload bytes: only a CONTENT checksum
+    catches this (zip structure can stay parseable)."""
+    p = str(tmp_path / "c.npz")
+    t = tree(1)
+    save_checkpoint(p, t, {"step": 5}, keep_previous=False)
+    with open(p, "rb") as f:
+        blob = bytearray(f.read())
+    # npz members are stored uncompressed: locate w's raw payload and
+    # flip bytes there (zip structure and npy headers stay intact)
+    off = blob.find(t["w"].tobytes())
+    assert off > 0
+    for i in range(off, off + 8):
+        blob[i] ^= 0xFF
+    with open(p, "wb") as f:
+        f.write(blob)
+    with pytest.raises(CheckpointCorruptError):
+        load_checkpoint(p, tree(1))
+
+
+def test_missing_array_raises_corrupt(tmp_path):
+    p = str(tmp_path / "c.npz")
+    save_checkpoint(p, {"w": np.zeros(3, np.float32)}, {"step": 1})
+    with pytest.raises(CheckpointCorruptError, match="missing array"):
+        load_checkpoint(p, tree(0))
+
+
+# ------------------------------------------------- last-known-good
+
+def training_tree(seed):
+    # the {"params", "opt"} layout load_training_state restores into
+    return {"params": {"w": tree(seed)["w"]}, "opt": {"b": tree(seed)["b"]}}
+
+
+def test_prev_rotation(tmp_path):
+    p = str(tmp_path / "c.npz")
+    save_checkpoint(p, tree(1), {"step": 10})
+    save_checkpoint(p, tree(2), {"step": 20})
+    assert verify_checkpoint(p)["step"] == 20
+    assert verify_checkpoint(p + ".prev")["step"] == 10
+    assert_tree_equal(load_checkpoint(p + ".prev", tree(0)), tree(1))
+
+
+def test_load_training_state_falls_back_to_prev(tmp_path):
+    p = str(tmp_path / "c.npz")
+    save_checkpoint(p, training_tree(1), {"step": 10})
+    save_checkpoint(p, training_tree(2), {"step": 20})
+    with open(p, "r+b") as f:
+        f.truncate(os.path.getsize(p) // 2)
+    with pytest.warns(RuntimeWarning, match="previous good checkpoint"):
+        params, _, step = load_training_state(
+            p, {"w": tree(0)["w"]}, {"b": tree(0)["b"]})
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(params["w"]), tree(1)["w"])
+
+
+def test_load_training_state_step0_when_all_corrupt(tmp_path):
+    p = str(tmp_path / "c.npz")
+    save_checkpoint(p, training_tree(1), {"step": 10})
+    save_checkpoint(p, training_tree(2), {"step": 20})
+    for q in (p, p + ".prev"):
+        with open(q, "r+b") as f:
+            f.truncate(os.path.getsize(q) // 2)
+    fresh_p, fresh_o = {"w": tree(7)["w"]}, {"b": tree(7)["b"]}
+    with pytest.warns(RuntimeWarning):
+        params, opt, step = load_training_state(p, fresh_p, fresh_o)
+    assert step == 0
+    assert params is fresh_p and opt is fresh_o
+
+
+def test_load_training_state_clean_paths(tmp_path):
+    p = str(tmp_path / "c.npz")
+    # no checkpoint at all: inputs unchanged, step 0, NO warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        params, opt, step = load_training_state(
+            p, {"w": tree(0)["w"]}, {"b": tree(0)["b"]})
+    assert step == 0
+    save_checkpoint(p, training_tree(3), {"step": 42})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        params, _, step = load_training_state(
+            p, {"w": tree(0)["w"]}, {"b": tree(0)["b"]})
+    assert step == 42
+    np.testing.assert_array_equal(np.asarray(params["w"]), tree(3)["w"])
