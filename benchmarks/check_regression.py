@@ -44,6 +44,10 @@ GATED_METRICS = (
     "makespan_replan_incremental_s",
     "wall_refined_over_dense",
     "wall_incremental_over_scratch",
+    # ISSUE 10: the solver-portfolio (MILP vs interval-time LNS race)
+    # makespans at every tier, including the 128/256-job tiers the
+    # dense MILP cannot touch
+    "makespan_portfolio_s",
     # BENCH_e2e.json (unified execution backends): how faithful the
     # sim-predicted makespan is to the actually-executed one
     "makespan_executed_over_predicted",
@@ -66,6 +70,12 @@ ABSOLUTE_MAX = {
     # magnitude above this ceiling) at bounded makespan overhead
     "recover_traj_err": 1e-6,
     "recover_overhead_x": 4.0,
+    # BENCH_solver.json (ISSUE 10 headline): the 64-job portfolio race
+    # runs on a fifth of the dense MILP's wall budget, so its wall over
+    # the CAPPED dense wall (a machine-independent constant) must stay
+    # well under one — 0.5 leaves 2x headroom over the bench's own
+    # tl/5 budget for thread/fork overhead on slow runners
+    "portfolio_wall_over_dense": 0.5,
 }
 
 # fixed-floor gates (higher is better): fresh < limit fails
@@ -80,6 +90,10 @@ ABSOLUTE_MIN = {
     # quarantine instead of deadlocking
     "recover_completes": 1.0,
     "quarantine_recorded": 1.0,
+    # BENCH_solver.json (ISSUE 10 headline): the 256-job tier — beyond
+    # the dense MILP's reach — must produce a feasible,
+    # conservation-clean plan inside its fixed 40 s budget, every run
+    "portfolio_completes_256": 1.0,
 }
 
 # per-metric tolerance overrides (take precedence over --tolerance):
@@ -96,6 +110,11 @@ TOLERANCE_OVERRIDES = {
     # magnitude
     "wall_incremental_over_scratch": 3.0,
     "makespan_dense_s": 0.5,
+    # portfolio makespans are ANYTIME incumbents under a wall budget:
+    # a slower runner gets fewer LNS iterations / MILP nodes, so the
+    # value breathes with machine speed (a real quality regression —
+    # e.g. losing the warm seed — blows past 50% immediately)
+    "makespan_portfolio_s": 0.5,
     # sim-vs-real fidelity mixes JIT compile costs and CPU contention
     # into real wall clock, both of which swing with runner speed and
     # core count; the bench itself hard-fails outside [0.1, 8]

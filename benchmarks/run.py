@@ -1279,7 +1279,12 @@ def bench_solver(quick=False):
     """The scheduling-core benchmark: solver wall time and makespan
     quality at {8, 32, 64} jobs for the dense time-indexed MILP vs the
     coarse-to-fine refined solve vs the warm-started incremental replan
-    (vs a from-scratch replan of the same mid-flight state).  Writes
+    (vs a from-scratch replan of the same mid-flight state), plus the
+    solver PORTFOLIO (ISSUE 10): at 64 jobs the MILP-vs-LNS race on a
+    fifth of the MILP's wall budget must match the capped-dense
+    incumbent (headline gate: <= dense makespan at >=4x less wall), and
+    128/256-job tiers — beyond what the dense MILP can touch — must
+    come back conservation-clean inside a fixed 40 s budget.  Writes
     BENCH_solver.json (repo root).
 
     Dense solves at the larger tiers hit the time limit (that is the
@@ -1288,7 +1293,12 @@ def bench_solver(quick=False):
     therefore accepts either a measured >=3x ratio or a dense solve
     still capped while the refined pass finished well under it.
     """
-    from repro.core.solver import (choices_from_profiles, solve_joint,
+    from repro.core.lns import lns_solve, validate_capacity
+    from repro.core.portfolio import (join_stragglers,
+                                      makespan_lower_bound,
+                                      solve_portfolio)
+    from repro.core.solver import (choices_from_profiles,
+                                   pooled_choice_map, solve_joint,
                                    solve_residual, split_fixed_running)
 
     tl = 40.0 if quick else 90.0
@@ -1355,6 +1365,48 @@ def bench_solver(quick=False):
             row["wall_refined_over_dense"] = wall_refined / wall_dense
         if row["scratch_capped"]:
             row["wall_incremental_over_scratch"] = wall_incr / wall_scratch
+
+        if n_jobs == 64:
+            # ---- the portfolio race (headline gate): a fifth of the
+            # MILP's budget, must match the capped-dense incumbent
+            cm = pooled_choice_map(jobs, profiles)
+            budgets = {None: 64}
+            t0 = time.time()
+            port = solve_portfolio(jobs, cm, budgets,
+                                   wall_budget_s=tl / 5.0,
+                                   gap_target=gap, seed=0)
+            wall_port = time.time() - t0
+            join_stragglers()
+            tel = port.telemetry
+            assert validate_capacity(port.assignments, budgets), \
+                "64-job portfolio plan violates capacity"
+            row["wall_portfolio_s"] = wall_port
+            row["makespan_portfolio_s"] = port.makespan_s
+            row["portfolio_winner"] = tel["backend"]
+            row["portfolio_gap"] = tel["gap"]
+            if row["dense_capped"]:
+                row["portfolio_wall_over_dense"] = wall_port / wall_dense
+                # ISSUE 10 headline: <= capped-dense incumbent makespan
+                # at >= 4x less wall
+                assert port.makespan_s <= dense.makespan_s + 1e-6, \
+                    f"portfolio makespan {port.makespan_s:.0f}s > " \
+                    f"capped dense {dense.makespan_s:.0f}s"
+                assert wall_port <= 0.25 * wall_dense + 1.0, \
+                    f"portfolio wall {wall_port:.1f}s not >=4x under " \
+                    f"dense {wall_dense:.1f}s"
+            # satellite: one LNS destroy/repair round at 64 jobs stays
+            # under ~50 ms (vectorized objective + event-sweep inserts)
+            lsol = lns_solve(jobs, cm, budgets, deadline_s=3.0, seed=0)
+            lt = lsol.telemetry
+            round_ms = lt["wall_s"] / max(lt["iters"], 1) * 1e3
+            row["lns_round_ms_64"] = round_ms
+            assert round_ms < 50.0, \
+                f"64-job LNS round {round_ms:.1f}ms >= 50ms"
+            emit("solver_portfolio_64race", wall_port * 1e6,
+                 f"mk={port.makespan_s:.0f}s vs dense "
+                 f"{dense.makespan_s:.0f}s wall={wall_port:.1f}s vs "
+                 f"{wall_dense:.1f}s winner={tel['backend']} "
+                 f"lns_round={round_ms:.1f}ms")
         out["tiers"][str(n_jobs)] = row
         emit(f"solver_{n_jobs}jobs", wall_dense * 1e6,
              f"dense={wall_dense:.1f}s refined={wall_refined:.1f}s "
@@ -1373,6 +1425,48 @@ def bench_solver(quick=False):
             f"{n_jobs} jobs: incremental replan makespan " \
             f"{incr.makespan_s:.0f}s > 1.2x scratch " \
             f"{scratch.makespan_s:.0f}s"
+
+    # ---- portfolio-only tiers (ISSUE 10): job counts the dense MILP
+    # cannot touch, on a FIXED 40 s budget (same in quick and nightly —
+    # the budget is the contract, not a share of the MILP's limit)
+    port_budget = 40.0
+    for n_jobs in (128, 256):
+        jobs, profiles = _solver_workload(n_jobs, total_gpus=64, seed=0)
+        cm = pooled_choice_map(jobs, profiles)
+        budgets = {None: 64}
+        lb = makespan_lower_bound(jobs, cm, budgets)
+        t0 = time.time()
+        port = solve_portfolio(jobs, cm, budgets,
+                               wall_budget_s=port_budget,
+                               gap_target=gap, seed=0)
+        wall_port = time.time() - t0
+        join_stragglers()
+        tel = port.telemetry
+        ok = validate_capacity(port.assignments, budgets)
+        complete = (ok and len(port.assignments) == n_jobs
+                    and wall_port <= port_budget * 1.2)
+        row = {
+            "jobs": n_jobs,
+            "wall_portfolio_s": wall_port,
+            "makespan_portfolio_s": port.makespan_s,
+            "portfolio_winner": tel["backend"],
+            "portfolio_gap": tel["gap"],
+            "lower_bound_s": lb,
+            "conservation_ok": ok,
+        }
+        if n_jobs == 256:
+            # ISSUE 10 headline: a feasible, conservation-clean plan for
+            # 256 jobs inside the 40 s budget (absolute-floor gated)
+            row["portfolio_completes_256"] = 1.0 if complete else 0.0
+            assert complete, \
+                f"256-job portfolio incomplete: conservation_ok={ok} " \
+                f"n_assigned={len(port.assignments)} " \
+                f"wall={wall_port:.1f}s (budget {port_budget:.0f}s)"
+        out["tiers"][str(n_jobs)] = row
+        emit(f"solver_portfolio_{n_jobs}jobs", wall_port * 1e6,
+             f"mk={port.makespan_s:.0f}s lb={lb:.0f}s "
+             f"gap={tel['gap']:.3f} winner={tel['backend']} "
+             f"wall={wall_port:.1f}s conservation_ok={ok}")
 
     # acceptance gates (ISSUE 4), at the 64-job tier.  When the dense
     # solve is still grinding at its time limit its true cost is only

@@ -23,7 +23,14 @@ Layering (each layer only imports downward):
                      interpolation (PerfModel, the profiles contract);
                      ObservedProfiles measured-feedback overlay
     solver.py        the joint MILPs (flat + node-locality), greedy fallback
-    baselines.py     paper baselines + the Saturn policy (emit Schedule IR)
+    lns.py           interval-time Large-Neighborhood-Search scheduler
+                     (no slot grid: real-valued starts, event-sweep
+                     capacity) — the portfolio's second engine
+    portfolio.py     SolverBackend protocol + registry; races MILP vs
+                     LNS under a shared wall budget, first-to-gap wins
+                     (optional CP-SAT slot behind a guarded import)
+    baselines.py     paper baselines + the Saturn policy (emit Schedule IR;
+                     SaturnPolicy(solver="portfolio") races the engines)
     executor.py      simulate() compatibility wrapper + legacy comparator,
                      LocalRunner serial building block
     api.py           SaturnSession facade
@@ -40,6 +47,8 @@ from .job import (ClusterSpec, DeviceClass, Job,            # noqa: F401
 from .perfmodel import (MergedProfiles, ObservedProfiles,   # noqa: F401
                         PerfModel, ThroughputCurve, select_anchor_counts)
 from .placement import ClassPool, FlatPool, NodeAware, make_backend  # noqa: F401
+from .portfolio import (SolverBackend, available_backends,  # noqa: F401
+                        register_backend, solve_portfolio)
 from .process_backend import ProcessJaxBackend              # noqa: F401
 from .runtime import (ExecutionBackend, SimBackend,         # noqa: F401
                       SimResult, execute_runtime, simulate_runtime)

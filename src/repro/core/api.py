@@ -147,6 +147,7 @@ class SaturnSession:
             refine: Optional[bool] = None,
             incremental: Optional[bool] = None,
             objective: Optional[str] = None,
+            solver: Optional[str] = None,
             backend: str = "sim",
             ckpt_dir: Optional[str] = None,
             chaos=None,
@@ -171,13 +172,17 @@ class SaturnSession:
         ``placement`` overrides ``cluster.placement`` for this run.
 
         The solver knobs (``n_slots``, ``time_limit_s``, ``mip_gap``,
-        ``refine``, ``incremental``, ``objective``) configure the
+        ``refine``, ``incremental``, ``objective``, ``solver``)
+        configure the
         default :class:`SaturnPolicy` this call constructs; passing them
         together with an explicit ``policy`` is an error — configure
         the policy directly instead of having knobs silently ignored.
         ``objective`` selects what the MILP minimizes ("makespan",
         "weighted_completion", "tardiness" or "fair_share" — see
-        ``repro.core.solver.OBJECTIVES``).
+        ``repro.core.solver.OBJECTIVES``).  ``solver="portfolio"``
+        races the MILP against the interval-time LNS per (re)plan
+        (first to the ``mip_gap`` target wins) — per-plan engine
+        telemetry lands in ``result.stats["solver"]``.
 
         ``chaos`` injects a :class:`~repro.core.chaos.ChaosTrace` —
         seeded node failures, spot revocations/grants and capacity
@@ -198,7 +203,8 @@ class SaturnSession:
                                    ("mip_gap", mip_gap),
                                    ("refine", refine),
                                    ("incremental", incremental),
-                                   ("objective", objective))
+                                   ("objective", objective),
+                                   ("solver", solver))
                  if v is not None}
         if policy is not None and knobs:
             raise ValueError(

@@ -19,15 +19,18 @@ the historical behavior.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Tuple
 
 import numpy as np
 
 from .perfmodel import iter_job_class_profiles, iter_job_profiles
+from .portfolio import solve_portfolio
 from .schedule import Policy, Schedule, ScheduleEntry
-from .solver import (OBJECTIVES, class_choice_map, pooled_choice_map,
-                     solve_joint, solve_joint_classes, solve_joint_nodes,
-                     solve_residual, split_fixed_running)
+from .solver import (OBJECTIVES, Assignment, Solution, class_choice_map,
+                     pooled_choice_map, solve_joint, solve_joint_classes,
+                     solve_joint_nodes, solve_residual,
+                     split_fixed_running)
 
 
 def _is_hetero(cluster) -> bool:
@@ -355,6 +358,18 @@ class SaturnPolicy(Policy):
     :mod:`repro.core.solver`): the paper's makespan (default), weighted
     completion time, deadline tardiness, or per-tenant fair share.  The
     node-aware MILP supports only makespan.
+
+    ``solver="portfolio"`` races the MILP against the interval-time LNS
+    (:mod:`repro.core.portfolio`) under ``time_limit_s`` of shared wall
+    budget with ``mip_gap`` as the first-to-gap target — the setting for
+    large job counts (64+) where the dense MILP caps out.  Replans reuse
+    the warm start both ways: previous starts window the MILP and seed
+    the LNS incumbent.  Not available under node-aware placement (the
+    node MILP has no portfolio peer).
+
+    Every plan carries ``Schedule.telemetry`` — ``{backend, wall_s, gap,
+    status, n_jobs}`` — which the runtime collects per (re)plan into
+    ``SimResult.stats["solver"]``.
     """
 
     name = "saturn"
@@ -363,16 +378,22 @@ class SaturnPolicy(Policy):
 
     def __init__(self, n_slots: int = 24, time_limit_s: float = 10.0, *,
                  mip_gap: float = 0.05, refine: bool = False,
-                 incremental: bool = True, objective: str = "makespan"):
+                 incremental: bool = True, objective: str = "makespan",
+                 solver: str = "milp", seed: int = 0):
         if objective not in OBJECTIVES:
             raise ValueError(f"unknown objective {objective!r}; "
                              f"expected one of {OBJECTIVES}")
+        if solver not in ("milp", "portfolio"):
+            raise ValueError(f"unknown solver {solver!r}; "
+                             "expected 'milp' or 'portfolio'")
         self.n_slots = n_slots
         self.time_limit_s = time_limit_s
         self.mip_gap = mip_gap
         self.refine = refine
         self.incremental = incremental
         self.objective = objective
+        self.solver = solver
+        self.seed = seed
         self._last_plan_t = 0.0
 
     @staticmethod
@@ -403,11 +424,38 @@ class SaturnPolicy(Policy):
         return (pooled_choice_map(live, profiles),
                 {None: int(cluster.total_gpus)})
 
+    @staticmethod
+    def _emit(sol, n_jobs: int, t0: float) -> Schedule:
+        """Solution -> Schedule, guaranteeing telemetry: backends that
+        measured themselves (portfolio/LNS) pass theirs through;
+        plain-MILP solves get it synthesized here."""
+        sched = sol.to_schedule()
+        if sched.telemetry is None:
+            sched.telemetry = {"backend": sol.solver,
+                               "wall_s": time.perf_counter() - t0,
+                               "gap": None,
+                               "status": sol.milp_status or sol.solver,
+                               "n_jobs": n_jobs}
+        return sched
+
     def plan(self, jobs, remaining, profiles, cluster, current,
              now_s: float = 0.0):
+        t0 = time.perf_counter()
         live = self._live(jobs, remaining, now_s)
         if not live:
             return Schedule([], solver=self.name)
+        if self.solver == "portfolio":
+            if getattr(cluster, "placement", "flat") == "node":
+                raise ValueError("solver='portfolio' does not support "
+                                 "node-aware placement; use the node "
+                                 "MILP (solver='milp')")
+            choice_map, budgets = self._choice_map(live, profiles,
+                                                   cluster)
+            sol = solve_portfolio(
+                live, choice_map, budgets, objective=self.objective,
+                wall_budget_s=self.time_limit_s,
+                gap_target=self.mip_gap, seed=self.seed)
+            return self._emit(sol, len(live), t0)
         if _is_hetero(cluster):
             sol = solve_joint_classes(
                 live, profiles, cluster, n_slots=min(self.n_slots, 20),
@@ -428,7 +476,7 @@ class SaturnPolicy(Policy):
                               time_limit_s=self.time_limit_s,
                               mip_gap=self.mip_gap, refine=self.refine,
                               objective=self.objective)
-        return sol.to_schedule()
+        return self._emit(sol, len(live), t0)
 
     def plan_incremental(self, jobs, remaining, profiles, cluster,
                          current, *, prev=None, now_s=0.0,
@@ -450,6 +498,7 @@ class SaturnPolicy(Policy):
                 return self.plan(jobs, remaining, profiles, cluster,
                                  current, now_s=now_s)
             return self.plan(jobs, remaining, profiles, cluster, current)
+        t0 = time.perf_counter()
         live = self._live(jobs, remaining, now_s)
         if not live:
             return Schedule([], solver=self.name)
@@ -461,19 +510,58 @@ class SaturnPolicy(Policy):
             # every running job keeps its config; nothing to re-solve
             sol = solve_residual([], choice_map, budgets, fixed,
                                  objective=self.objective)
-            return sol.to_schedule()
+            return self._emit(sol, 0, t0)
         # warm incumbent: the previous plan's starts, shifted to now
         residual_names = {j.name for j in residual}
         warm = {e.job: max(0.0, e.start_s - elapsed)
                 for e in prev.entries
                 if e.start_s is not None and e.job in residual_names}
+        if self.solver == "portfolio":
+            sol = self._portfolio_residual(residual, choice_map,
+                                           budgets, fixed, prev,
+                                           elapsed, warm)
+            return self._emit(sol, len(residual), t0)
         n_slots = min(self.n_slots, 20) if _is_hetero(cluster) \
             else self.n_slots
         sol = solve_residual(
             residual, choice_map, budgets, fixed, n_slots=n_slots,
             time_limit_s=self.time_limit_s, mip_gap=self.mip_gap,
             warm_starts=warm or None, objective=self.objective)
-        return sol.to_schedule()
+        return self._emit(sol, len(residual), t0)
+
+    def _portfolio_residual(self, residual, choice_map, budgets, fixed,
+                            prev, elapsed, warm):
+        """The portfolio's incremental replan: fixed running jobs become
+        ``reserved=`` capacity triples (exactly like ``solve_residual``),
+        previous-plan starts window the MILP (``warm_starts``) AND seed
+        the LNS incumbent (previous entries re-expressed as Assignments
+        with remaining-work runtimes, shifted to now)."""
+        reserved = [(a.device_class, a.n_gpus, a.runtime_s)
+                    for a in fixed]
+        residual_names = {j.name for j in residual}
+        incumbent = []
+        for e in prev.entries:
+            if e.job not in residual_names or e.start_s is None:
+                continue
+            for c in choice_map[e.job]:
+                if (c.technique == e.technique
+                        and c.n_gpus == e.n_gpus
+                        and c.device_class == e.device_class):
+                    incumbent.append(Assignment(
+                        e.job, c.technique, c.n_gpus,
+                        max(0.0, e.start_s - elapsed), c.runtime_s,
+                        device_class=c.device_class))
+                    break
+        sol = solve_portfolio(
+            residual, choice_map, budgets, reserved=reserved,
+            objective=self.objective, wall_budget_s=self.time_limit_s,
+            gap_target=self.mip_gap, seed=self.seed,
+            warm_starts=warm or None, incumbent=incumbent or None)
+        assignments = list(fixed) + list(sol.assignments)
+        mk = max(a.end_s for a in assignments)
+        return Solution(assignments, mk, sol.solver,
+                        milp_status=sol.milp_status,
+                        telemetry=sol.telemetry)
 
 
 class SaturnStatic(SaturnPolicy):

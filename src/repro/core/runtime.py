@@ -481,6 +481,7 @@ def execute_runtime(jobs: List[Job], policy: Policy,
     replans = 0
     restarts = 0
     failures = 0
+    solver_log: List[dict] = []   # per-(re)plan telemetry -> stats["solver"]
     worker_failures = 0
     retry = getattr(exec_backend, "retry_policy", None) or RetryPolicy()
     fail_counts: Dict[str, int] = {}   # job -> detected failures so far
@@ -684,6 +685,9 @@ def execute_runtime(jobs: List[Job], policy: Policy,
             planning_cluster(), dict(state.current_assign), prev=order,
             now_s=state.t, running=frozenset(state.running)))
         replans += 1
+        tel = getattr(order, "telemetry", None)
+        if tel is not None:     # which engine planned, at what cost
+            solver_log.append({**tel, "t": state.t})
         if preempt:
             new_assign = order.assignment_map()
             for name in list(state.running):
@@ -1017,6 +1021,9 @@ def execute_runtime(jobs: List[Job], policy: Policy,
         fleets.finish(hooks, state.t)
         stats = dict(stats)
         stats["serving"] = fleets.stats()
+    if solver_log:
+        stats = dict(stats)
+        stats["solver"] = solver_log
     verify_conservation(state)
     return SimResult(policy.name, state.t, state.gantt, replans, restarts,
                      failures=failures, stats=stats,

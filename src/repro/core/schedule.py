@@ -77,6 +77,10 @@ class Schedule:
     entries: List[ScheduleEntry] = dataclasses.field(default_factory=list)
     solver: str = "policy"              # which planner produced it
     makespan_s: Optional[float] = None  # planner-estimated makespan
+    # solver telemetry {backend, wall_s, gap, status, n_jobs} attached by
+    # planners that measure their solve; the runtime copies it per
+    # (re)plan into SimResult.stats["solver"]
+    telemetry: Optional[dict] = None
 
     def __iter__(self):
         return iter(self.entries)

@@ -110,8 +110,14 @@ class Solution:
     assignments: List[Assignment]
     makespan_s: float
     solver: str     # "milp" | "milp-nodes" | "milp-classes" |
-    #                 "milp-incremental" | "greedy" | "greedy-incremental"
+    #                 "milp-incremental" | "greedy" | "greedy-incremental" |
+    #                 "lns" | "portfolio[...]"
     milp_status: Optional[str] = None
+    # solver telemetry {backend, wall_s, gap, status, ...} — filled by the
+    # portfolio/LNS backends and surfaced via Schedule into
+    # SimResult.stats["solver"] so callers stop re-deriving which engine
+    # won and whether it capped
+    telemetry: Optional[dict] = None
 
     def order(self) -> List[Assignment]:
         return sorted(self.assignments, key=lambda a: (a.start_s, a.job))
@@ -123,7 +129,8 @@ class Solution:
                                  nodes=a.nodes, device_class=a.device_class)
                    for a in self.order()]
         return Schedule(entries, solver=self.solver,
-                        makespan_s=self.makespan_s)
+                        makespan_s=self.makespan_s,
+                        telemetry=self.telemetry)
 
 
 def _pool_of(choice: Choice, budgets) -> Optional[str]:
@@ -182,6 +189,57 @@ def objective_value(assignments: Iterable[Assignment], jobs: List[Job],
         return max((sum(v) / len(v) for v in per.values()), default=0.0)
     raise ValueError(f"unknown objective {objective!r}; "
                      f"expected one of {OBJECTIVES}")
+
+
+def objective_arrays(jobs: List[Job]) -> Dict[str, np.ndarray]:
+    """Per-job numpy arrays (weights, deadlines, tenant one-hot) for
+    :func:`objective_values_batch` — precompute once, score many
+    candidate plans.  Row order follows ``jobs``."""
+    n = len(jobs)
+    w = np.array([_weight(j) for j in jobs], dtype=np.float64)
+    dl = np.array([_deadline(j) for j in jobs], dtype=np.float64)
+    tenants = sorted({getattr(j, "tenant", "default") for j in jobs})
+    tix = {t: i for i, t in enumerate(tenants)}
+    onehot = np.zeros((n, max(len(tenants), 1)), dtype=np.float64)
+    for i, j in enumerate(jobs):
+        onehot[i, tix[getattr(j, "tenant", "default")]] = 1.0
+    counts = np.maximum(onehot.sum(axis=0), 1.0)
+    return {"weight": w, "deadline": dl, "tenant_onehot": onehot,
+            "tenant_counts": counts}
+
+
+def objective_values_batch(ends, jobs: Optional[List[Job]] = None,
+                           objective: str = "makespan", *,
+                           arrays: Optional[Dict[str, np.ndarray]] = None):
+    """Vectorized :func:`objective_value` over candidate plans.
+
+    ``ends`` is the per-job completion-time array — shape ``(n_jobs,)``
+    for one plan (returns a float) or ``(n_plans, n_jobs)`` for a batch
+    (returns a ``(n_plans,)`` array), column order following ``jobs``.
+    Pass ``arrays=`` (from :func:`objective_arrays`) to amortize the
+    per-job attribute extraction across calls — the LNS hot loop scores
+    every destroy/repair candidate through here, so the per-plan cost is
+    pure numpy with no Python per-job iteration.
+    """
+    arrs = arrays if arrays is not None else objective_arrays(jobs)
+    E = np.atleast_2d(np.asarray(ends, dtype=np.float64))
+    if E.shape[1] == 0:
+        vals = np.zeros(E.shape[0])
+    elif objective == "makespan":
+        vals = E.max(axis=1)
+    elif objective == "weighted_completion":
+        vals = E @ arrs["weight"]
+    elif objective == "tardiness":
+        fin = np.isfinite(arrs["deadline"])
+        late = np.maximum(0.0, E[:, fin] - arrs["deadline"][fin])
+        vals = late @ arrs["weight"][fin]
+    elif objective == "fair_share":
+        vals = (E @ arrs["tenant_onehot"] / arrs["tenant_counts"]) \
+            .max(axis=1)
+    else:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"expected one of {OBJECTIVES}")
+    return vals if np.ndim(ends) == 2 else float(vals[0])
 
 
 # ------------------------------------------------- shared MILP machinery

@@ -1,0 +1,210 @@
+"""Interval-time LNS scheduler (repro.core.lns): property tests.
+
+Every LNS plan must (a) respect per-device-class capacity at every
+instant (event-sweep validation — no slot grid to hide behind),
+(b) respect ``reserved=`` fleet/running-job capacity triples, (c) never
+come back worse than its greedy seed under the active objective (the
+anytime contract), and (d) be bit-identical for the same seed when the
+iteration cap binds before the wall clock (the determinism contract).
+
+Property tests run through tests/_hypothesis_compat.py so tier-1 works
+with or without hypothesis installed.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.core.job import Job
+from repro.core.lns import lns_solve, validate_capacity
+from repro.core.solver import (OBJECTIVES, Choice, greedy_schedule,
+                               objective_arrays, objective_value,
+                               objective_values_batch)
+
+CFG = get_config("xlstm-125m").reduced()
+
+
+def mk_job(name, steps=100, **kw):
+    return Job(name, CFG, batch_size=8, seq_len=64, total_steps=steps,
+               **kw)
+
+
+def workload(n_jobs, seed, classes=(None,), deadlines=False,
+             tenants=1):
+    """Jobs + per-class choice lists + budgets, with scaling-efficiency
+    spread so packing actually matters."""
+    rng = np.random.RandomState(seed)
+    budgets = {dc: 16 for dc in classes}
+    jobs, cm = [], {}
+    for i in range(n_jobs):
+        kw = {}
+        if deadlines and rng.rand() < 0.7:
+            kw["deadline_s"] = float(rng.uniform(50, 400))
+        if tenants > 1:
+            kw["tenant"] = f"t{rng.randint(tenants)}"
+        kw["weight"] = float(rng.uniform(0.5, 3.0))
+        j = mk_job(f"j{i}", steps=int(rng.randint(50, 300)), **kw)
+        jobs.append(j)
+        base = rng.uniform(20.0, 200.0)
+        eff = rng.uniform(0.5, 0.95)
+        choices = []
+        for dc in classes:
+            speed = 1.0 if dc in (None, "a100") else 0.5
+            for g in (1, 2, 4, 8):
+                choices.append(Choice("fsdp", g,
+                                      base / (g ** eff) / speed,
+                                      device_class=dc))
+        cm[j.name] = choices
+    return jobs, cm, budgets
+
+
+# ------------------------------------------------------------ properties
+
+@settings(max_examples=10)
+@given(seed=st.integers(0, 10_000),
+       n_jobs=st.integers(2, 14),
+       objective=st.sampled_from(OBJECTIVES),
+       hetero=st.booleans())
+def test_lns_conserves_capacity_and_beats_seed(seed, n_jobs, objective,
+                                               hetero):
+    """Core property: per-class capacity clean AND never worse than the
+    greedy seed under the active objective, for every objective, flat
+    and heterogeneous."""
+    classes = ("a100", "v100") if hetero else (None,)
+    jobs, cm, budgets = workload(n_jobs, seed, classes=classes,
+                                 deadlines=True, tenants=3)
+    sol = lns_solve(jobs, cm, budgets, objective=objective,
+                    deadline_s=0.3, seed=seed)
+    assert {a.job for a in sol.assignments} == {j.name for j in jobs}
+    assert validate_capacity(sol.assignments, budgets)
+    seed_sol = greedy_schedule(jobs, cm, budgets, objective=objective)
+    lv = objective_value(sol.assignments, jobs, objective)
+    gv = objective_value(seed_sol.assignments, jobs, objective)
+    assert lv <= gv + 1e-6, f"LNS {lv} worse than greedy seed {gv}"
+
+
+@settings(max_examples=8)
+@given(seed=st.integers(0, 10_000), n_jobs=st.integers(2, 10))
+def test_lns_respects_reserved_triples(seed, n_jobs):
+    """``reserved=`` capacity (running jobs / serving fleets) is never
+    double-booked: the event sweep including the reservations stays
+    within budget, and an infinite-release reservation is permanent."""
+    jobs, cm, budgets = workload(n_jobs, seed)
+    reserved = [(None, 6, 80.0), (None, 4, float("inf"))]
+    sol = lns_solve(jobs, cm, budgets, reserved=reserved,
+                    deadline_s=0.3, seed=seed)
+    assert {a.job for a in sol.assignments} == {j.name for j in jobs}
+    assert validate_capacity(sol.assignments, budgets,
+                             reserved=reserved)
+    # the permanent 4-GPU reservation leaves at most 12 concurrent
+    for a in sol.assignments:
+        assert a.n_gpus <= 12
+
+
+def test_lns_determinism_same_seed_same_plan():
+    """Same seed + an iteration cap that binds before the wall clock
+    => bit-identical plans (the wall deadline is only checked between
+    iterations, so it can't truncate differently across runs)."""
+    jobs, cm, budgets = workload(10, 42, deadlines=True, tenants=2)
+    kw = dict(deadline_s=60.0, max_iters=60, seed=7,
+              objective="weighted_completion")
+    a = lns_solve(jobs, cm, budgets, **kw)
+    b = lns_solve(jobs, cm, budgets, **kw)
+    pa = sorted((x.job, x.technique, x.n_gpus, x.device_class,
+                 round(x.start_s, 9)) for x in a.assignments)
+    pb = sorted((x.job, x.technique, x.n_gpus, x.device_class,
+                 round(x.start_s, 9)) for x in b.assignments)
+    assert pa == pb
+    assert a.telemetry["iters"] == b.telemetry["iters"]
+
+
+def test_lns_different_seeds_explore_differently():
+    jobs, cm, budgets = workload(12, 5)
+    a = lns_solve(jobs, cm, budgets, deadline_s=60.0, max_iters=40,
+                  seed=0)
+    b = lns_solve(jobs, cm, budgets, deadline_s=60.0, max_iters=40,
+                  seed=1)
+    # both valid; they need not match (and essentially never do)
+    assert validate_capacity(a.assignments, budgets)
+    assert validate_capacity(b.assignments, budgets)
+
+
+def test_lns_incumbent_adopted_when_better():
+    """A warm incumbent (the previous plan on a replan) seeds the
+    search: the result is never worse than the incumbent's value."""
+    jobs, cm, budgets = workload(8, 3)
+    good = lns_solve(jobs, cm, budgets, deadline_s=1.0, seed=0)
+    warm = lns_solve(jobs, cm, budgets, deadline_s=60.0, max_iters=5,
+                     seed=1, incumbent=good.assignments)
+    gv = objective_value(good.assignments, jobs, "makespan")
+    wv = objective_value(warm.assignments, jobs, "makespan")
+    assert wv <= gv + 1e-6
+
+
+def test_lns_gap_target_early_exit():
+    """With the trivial lower bound of 0 every plan has gap 1, so a
+    gap_target of 1.0 exits after the seed round."""
+    jobs, cm, budgets = workload(8, 11)
+    sol = lns_solve(jobs, cm, budgets, deadline_s=60.0, seed=0,
+                    gap_target=1.0, lower_bound=1e-9)
+    assert sol.telemetry["status"] == "gap_target"
+
+
+def test_lns_empty_jobs():
+    sol = lns_solve([], {}, {None: 8})
+    assert sol.assignments == [] and sol.makespan_s == 0.0
+    assert sol.telemetry["status"] == "empty"
+
+
+def test_lns_telemetry_shape():
+    jobs, cm, budgets = workload(6, 9)
+    sol = lns_solve(jobs, cm, budgets, deadline_s=0.2, seed=0)
+    tel = sol.telemetry
+    assert tel["backend"] == "lns"
+    assert {"wall_s", "gap", "status", "iters", "n_jobs"} <= set(tel)
+    assert tel["n_jobs"] == 6
+
+
+def test_lns_infeasible_choice_raises():
+    """A job whose every choice exceeds every pool's budget cannot be
+    placed — that is a planning error, not a silent drop."""
+    j = mk_job("big")
+    cm = {"big": [Choice("fsdp", 64, 10.0)]}
+    with pytest.raises(RuntimeError):
+        lns_solve([j], cm, {None: 8}, deadline_s=0.1)
+
+
+# ----------------------------------------- vectorized objective batches
+
+@settings(max_examples=10)
+@given(seed=st.integers(0, 10_000),
+       objective=st.sampled_from(OBJECTIVES))
+def test_objective_values_batch_matches_scalar(seed, objective):
+    """The vectorized per-plan scorer (what makes an LNS round cheap)
+    agrees with the reference ``objective_value`` on single plans."""
+    jobs, cm, budgets = workload(9, seed, deadlines=True, tenants=3)
+    sol = greedy_schedule(jobs, cm, budgets, objective=objective)
+    ref = objective_value(sol.assignments, jobs, objective)
+    by = {a.job: a.end_s for a in sol.assignments}
+    ends = np.array([by[j.name] for j in jobs])
+    got = objective_values_batch(ends, jobs, objective)
+    assert got == pytest.approx(ref, rel=1e-9, abs=1e-9)
+    # and the (B, n) form scores B plans at once
+    batch = np.stack([ends, ends * 2.0])
+    arrays = objective_arrays(jobs)
+    vals = objective_values_batch(batch, jobs, objective, arrays=arrays)
+    assert vals.shape == (2,)
+    assert vals[0] == pytest.approx(ref, rel=1e-9, abs=1e-9)
+
+
+def test_objective_values_batch_unknown_objective():
+    with pytest.raises(ValueError):
+        objective_values_batch(np.zeros(3), [], "latency")
+
+
+def test_validate_capacity_catches_violation():
+    from repro.core.solver import Assignment
+    bad = [Assignment("a", "fsdp", 8, 0.0, 10.0),
+           Assignment("b", "fsdp", 8, 5.0, 10.0)]
+    assert not validate_capacity(bad, {None: 8})
+    assert validate_capacity(bad, {None: 16})

@@ -1,0 +1,238 @@
+"""Solver portfolio (repro.core.portfolio): backend registry, the
+MILP-vs-LNS race, telemetry end-to-end through the runtime, and the
+guarded-import CP-SAT slot.
+
+MILP outcomes are time-limit-nondeterministic, so the race assertions
+check the portfolio's CONTRACT (feasible, never worse than greedy,
+telemetry present) rather than which engine won.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.core.job import ClusterSpec, Job
+from repro.core.lns import validate_capacity
+from repro.core.portfolio import (HAVE_ORTOOLS, SOLVER_BACKENDS,
+                                  LnsBackend, MilpRefinedBackend,
+                                  SolverBackend, available_backends,
+                                  join_stragglers, makespan_lower_bound,
+                                  register_backend, solve_portfolio)
+from repro.core.solver import (Choice, greedy_schedule, objective_value)
+
+CFG = get_config("xlstm-125m").reduced()
+
+
+def workload(n_jobs, seed):
+    rng = np.random.RandomState(seed)
+    jobs, cm = [], {}
+    for i in range(n_jobs):
+        j = Job(f"j{i}", CFG, batch_size=8, seq_len=64,
+                total_steps=int(rng.randint(50, 300)))
+        jobs.append(j)
+        base = rng.uniform(20.0, 200.0)
+        eff = rng.uniform(0.5, 0.95)
+        cm[j.name] = [Choice("fsdp", g, base / g ** eff)
+                      for g in (1, 2, 4, 8)]
+    return jobs, cm, {None: 16}
+
+
+# -------------------------------------------------------------- registry
+
+def test_registry_has_both_engines():
+    assert {"milp", "lns"} <= set(available_backends())
+    assert SOLVER_BACKENDS["milp"] is MilpRefinedBackend
+    assert SOLVER_BACKENDS["lns"] is LnsBackend
+
+
+def test_register_custom_backend():
+    """The protocol seam: any SolverBackend subclass slots into the
+    race by name, exactly how CP-SAT would."""
+
+    @register_backend
+    class GreedyBackend(SolverBackend):
+        name = "test-greedy"
+
+        def solve(self, jobs, choice_map, budgets, *, reserved=(),
+                  objective="makespan", time_limit_s=10.0,
+                  gap_target=0.05, seed=0, warm_starts=None,
+                  incumbent=None, lower_bound=None, stop=None):
+            sol = greedy_schedule(jobs, choice_map, budgets,
+                                  reserved=list(reserved),
+                                  objective=objective)
+            sol.telemetry = {"backend": self.name, "wall_s": 0.0,
+                             "gap": None, "status": "greedy",
+                             "n_jobs": len(jobs)}
+            return sol
+
+    try:
+        jobs, cm, budgets = workload(5, 0)
+        sol = solve_portfolio(jobs, cm, budgets, wall_budget_s=1.0,
+                              backends=("test-greedy", "lns"))
+        assert "test-greedy" in sol.telemetry["engines"]
+    finally:
+        del SOLVER_BACKENDS["test-greedy"]
+
+
+# ------------------------------------------------------------- the race
+
+@settings(max_examples=5)
+@given(seed=st.integers(0, 10_000), n_jobs=st.integers(3, 12))
+def test_portfolio_feasible_and_never_worse_than_greedy(seed, n_jobs):
+    jobs, cm, budgets = workload(n_jobs, seed)
+    sol = solve_portfolio(jobs, cm, budgets, wall_budget_s=1.0,
+                          gap_target=0.05, seed=seed)
+    join_stragglers()
+    assert {a.job for a in sol.assignments} == {j.name for j in jobs}
+    assert validate_capacity(sol.assignments, budgets)
+    gv = greedy_schedule(jobs, cm, budgets).makespan_s
+    pv = objective_value(sol.assignments, jobs, "makespan")
+    assert pv <= gv + 1e-6
+    assert sol.solver.startswith("portfolio[")
+
+
+def test_portfolio_telemetry_shape():
+    jobs, cm, budgets = workload(6, 1)
+    sol = solve_portfolio(jobs, cm, budgets, wall_budget_s=1.0, seed=0)
+    join_stragglers()
+    tel = sol.telemetry
+    assert {"backend", "wall_s", "gap", "status", "n_jobs",
+            "engines"} <= set(tel)
+    assert tel["n_jobs"] == 6
+    assert tel["status"] in ("gap_target", "deadline")
+    for name, sub in tel["engines"].items():
+        assert sub["backend"] == name
+
+
+def test_portfolio_respects_reserved():
+    jobs, cm, budgets = workload(6, 2)
+    reserved = [(None, 6, 50.0), (None, 4, float("inf"))]
+    sol = solve_portfolio(jobs, cm, budgets, reserved=reserved,
+                          wall_budget_s=1.0, seed=0)
+    join_stragglers()
+    assert validate_capacity(sol.assignments, budgets,
+                             reserved=reserved)
+
+
+def test_portfolio_empty_jobs():
+    sol = solve_portfolio([], {}, {None: 8})
+    assert sol.assignments == []
+    assert sol.telemetry["status"] == "empty"
+
+
+def test_portfolio_unknown_objective_raises():
+    jobs, cm, budgets = workload(3, 0)
+    with pytest.raises(ValueError):
+        solve_portfolio(jobs, cm, budgets, objective="latency")
+
+
+def test_makespan_lower_bound_is_valid():
+    """The area/critical-path bound must lower-bound any feasible
+    plan's makespan (it is what first-to-gap is measured against)."""
+    jobs, cm, budgets = workload(10, 4)
+    lb = makespan_lower_bound(jobs, cm, budgets)
+    sol = greedy_schedule(jobs, cm, budgets)
+    assert 0.0 < lb <= sol.makespan_s + 1e-9
+    assert makespan_lower_bound([], {}, budgets) == 0.0
+
+
+# --------------------------------------------- policy/runtime plumbing
+
+def _profiles(jobs, seed):
+    from repro.core.profiler import Profile
+    rng = np.random.RandomState(seed)
+    out = {}
+    for j in jobs:
+        base = rng.uniform(1.0, 4.0)
+        eff = rng.uniform(0.5, 0.95)
+        for g in (1, 2, 4, 8):
+            for tech in ("ddp", "fsdp"):
+                out[(j.name, tech, g)] = Profile(
+                    j.name, tech, g, base / g ** eff, 1e9, True, "t")
+    return out
+
+
+def test_saturn_policy_portfolio_end_to_end():
+    """SaturnPolicy(solver='portfolio') plans through the runtime and
+    every (re)plan's engine telemetry lands in stats['solver']."""
+    from repro.core.baselines import SaturnPolicy
+    from repro.core.runtime import simulate_runtime
+
+    jobs = [Job(f"j{i}", CFG, 8, 64,
+                total_steps=int(np.random.RandomState(i).randint(60, 150)))
+            for i in range(6)]
+    profiles = _profiles(jobs, 0)
+    cluster = ClusterSpec(nodes=1, gpus_per_node=8)
+    pol = SaturnPolicy(time_limit_s=1.0, solver="portfolio",
+                       mip_gap=0.05)
+    res = simulate_runtime(jobs, pol, profiles, cluster,
+                           introspect_every_s=100.0)
+    join_stragglers()
+    log = res.stats["solver"]
+    assert len(log) == res.replans >= 1
+    for entry in log:
+        assert {"backend", "wall_s", "gap", "status", "n_jobs",
+                "t"} <= set(entry)
+    # at least the initial plan raced both engines
+    assert "engines" in log[0]
+
+
+def test_saturn_policy_milp_also_reports_telemetry():
+    """stats['solver'] is not portfolio-only: the plain MILP policy
+    reports which path planned (satellite: stop re-deriving the
+    winner)."""
+    from repro.core.baselines import SaturnPolicy
+    from repro.core.runtime import simulate_runtime
+
+    jobs = [Job(f"j{i}", CFG, 8, 64, total_steps=80) for i in range(4)]
+    profiles = _profiles(jobs, 1)
+    cluster = ClusterSpec(nodes=1, gpus_per_node=8)
+    res = simulate_runtime(jobs, SaturnPolicy(time_limit_s=2.0),
+                           profiles, cluster, introspect_every_s=100.0)
+    log = res.stats["solver"]
+    assert log and all("backend" in e and "wall_s" in e for e in log)
+
+
+def test_saturn_policy_rejects_bad_solver():
+    from repro.core.baselines import SaturnPolicy
+    with pytest.raises(ValueError):
+        SaturnPolicy(solver="simplex")
+
+
+def test_saturn_policy_portfolio_rejects_node_placement():
+    from repro.core.baselines import SaturnPolicy
+
+    jobs = [Job("j0", CFG, 8, 64, total_steps=50)]
+    profiles = _profiles(jobs, 2)
+    cluster = ClusterSpec(nodes=2, gpus_per_node=8, placement="node")
+    pol = SaturnPolicy(solver="portfolio")
+    with pytest.raises(ValueError, match="node"):
+        pol.plan(jobs, {"j0": 50}, profiles, cluster, {})
+
+
+# ------------------------------------------------- optional CP-SAT slot
+
+def test_cpsat_backend_is_optional():
+    """The guarded import contract: without ortools the backend class
+    exists but is NOT registered (never a hard dependency); with it,
+    it registers like any other engine."""
+    from repro.core.portfolio import CpSatBackend
+    assert CpSatBackend.name == "cpsat"
+    if HAVE_ORTOOLS:
+        assert "cpsat" in SOLVER_BACKENDS
+    else:
+        assert "cpsat" not in SOLVER_BACKENDS
+        with pytest.raises(RuntimeError, match="ortools"):
+            CpSatBackend().solve(*workload(2, 0))
+
+
+@pytest.mark.skipif(not HAVE_ORTOOLS,
+                    reason="ortools not installed (cannot be installed "
+                           "in this environment — the CP-SAT backend "
+                           "is an optional slot, never required)")
+def test_cpsat_backend_solves():     # pragma: no cover - optional dep
+    jobs, cm, budgets = workload(5, 0)
+    from repro.core.portfolio import CpSatBackend
+    sol = CpSatBackend().solve(jobs, cm, budgets, time_limit_s=5.0)
+    assert {a.job for a in sol.assignments} == {j.name for j in jobs}
+    assert validate_capacity(sol.assignments, budgets)
